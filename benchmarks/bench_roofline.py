@@ -1,0 +1,45 @@
+"""Roofline table — reads the dry-run artifacts (experiments/dryrun/*.json)
+and emits one row per (arch x shape) cell on the single-pod mesh: the three
+terms, the dominant bottleneck, and the useful-FLOPs ratio.
+
+Run ``python -m repro.launch.dryrun --all`` first (the dry-run is hours of
+XLA compile; this benchmark only aggregates).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def main() -> None:
+    if not DRYRUN_DIR.exists():
+        emit("roofline_table", 0.0, "missing:run repro.launch.dryrun --all first")
+        return
+    for f in sorted(DRYRUN_DIR.glob("*_single.json")):
+        d = json.loads(f.read_text())
+        name = f"roofline_{d['arch']}_{d['shape']}"
+        if "skipped" in d:
+            emit(name, 0.0, "skipped:sub-quadratic-only-shape")
+            continue
+        if "error" in d:
+            emit(name, 0.0, f"error:{d['error'][:60]}")
+            continue
+        t = d["terms_s"]
+        temp_gb = d["memory"].get("temp_size_in_bytes", 0) / 1e9
+        emit(
+            name,
+            d.get("compile_s", 0.0) * 1e6,
+            f"compute={t['compute']:.4f}s;memory={t['memory']:.4f}s;"
+            f"collective={t['collective']:.4f}s;dominant={d['dominant']};"
+            f"useful_flops_ratio={d['useful_flops_ratio']:.2f};"
+            f"temp_gb={temp_gb:.1f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""§3 — scheduler wall-time vs the exhaustive optimal search.
+
+The paper reports the optimal scheduler checking 27 405 possibilities in
+~18 hours on a 4-socket Xeon server. Our batched closed-form evaluator
+(beyond-paper: multiset placement collapse + vectorized max-stable-rate
+scoring) covers a *larger* design space in seconds on one CPU; the
+proposed heuristic is another 2-3 orders faster.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core import linear_topology, optimal_schedule, paper_cluster, schedule
+from repro.core.refine import refine
+
+
+def main() -> None:
+    cluster = paper_cluster((1, 1, 1))
+    topo = linear_topology()
+
+    t0 = time.perf_counter()
+    sched = schedule(topo, cluster, r0=1.0, rate_epsilon=0.05)
+    refine(sched.etg, cluster)
+    t_heur = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    opt = optimal_schedule(topo, cluster, max_total_tasks=10)
+    t_opt = time.perf_counter() - t0
+
+    emit(
+        "sec3_scheduler_walltime",
+        t_heur * 1e6,
+        f"heuristic={t_heur*1e3:.1f}ms;optimal={t_opt:.2f}s;"
+        f"candidates={opt.candidates_evaluated};"
+        f"paper_optimal=18h@27405cands;"
+        f"speedup_vs_paper={(18*3600)/max(t_opt,1e-9):,.0f}x",
+    )
+
+
+if __name__ == "__main__":
+    main()

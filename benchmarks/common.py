@@ -1,0 +1,25 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows; ``derived``
+carries the benchmark's headline quantity (throughput, accuracy, ...).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+__all__ = ["timeit_us", "emit"]
+
+
+def timeit_us(fn: Callable, iters: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,55 @@
+"""Render the §Roofline markdown tables from dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.make_tables >> EXPERIMENTS.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+
+
+def table(pattern: str, title: str, dedup: bool = True) -> None:
+    rows = []
+    seen = set()
+    for f in sorted(glob.glob(pattern)):
+        d = json.load(open(f))
+        tag = f.split("/")[-2]
+        name = d["arch"].replace("-", "_").replace(".", "_")
+        if not dedup:
+            name = f"{name} ({tag})"
+        key = (name, d["shape"])
+        if key in seen:
+            continue
+        seen.add(key)
+        if "skipped" in d:
+            rows.append((key[0], key[1], "skip", "", "", "", "", "", ""))
+            continue
+        if "error" in d:
+            rows.append((key[0], key[1], "ERROR", "", "", "", "", "", ""))
+            continue
+        t = d["terms_s"]
+        rows.append((
+            key[0], key[1], d["dominant"],
+            f"{t['compute']:.3f}", f"{t['memory']:.3f}", f"{t['collective']:.3f}",
+            f"{d['memory'].get('temp_size_in_bytes', 0)/1e9:.1f}",
+            f"{d['useful_flops_ratio']:.2f}",
+            f"{d.get('compile_s', 0):.0f}s",
+        ))
+    print(f"\n### {title}\n")
+    print("| arch | shape | dominant | compute s | memory s | collective s | "
+          "temp GB/dev | 6ND/HLO | compile |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(rows):
+        print("| " + " | ".join(str(x) for x in r) + " |")
+
+
+def main() -> None:
+    table("experiments/dryrun/*_single.json", "Single-pod 16x16 (roofline baselines)")
+    table("experiments/dryrun/*_multi.json", "Multi-pod 2x16x16 (shardability proof)")
+    table("experiments/hillclimb*/*.json",
+          "Hillclimb iterations (3 chosen cells; dir = iteration)", dedup=False)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig6   CPU-usage prediction accuracy            (bench_prediction)
+  fig7   instance-count selection (RollingCount / UniqueVisitor)
+  fig8   throughput: default vs proposed vs optimal (also fig3)
+  fig9   per-machine utilization comparison
+  fig10  large-scale simulation scenarios + Table 4/5
+  sec3   scheduler wall-time vs exhaustive optimal
+  planner beyond-paper heterogeneous LM fleet planning
+  roofline dry-run roofline aggregation (requires dry-run artifacts)
+"""
+
+from __future__ import annotations
+
+from benchmarks import (
+    bench_instances,
+    bench_largescale,
+    bench_planner,
+    bench_prediction,
+    bench_roofline,
+    bench_sched_speed,
+    bench_throughput,
+    bench_utilization,
+)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_prediction.main()
+    bench_throughput.main()
+    bench_instances.main()
+    bench_utilization.main()
+    bench_largescale.main()
+    bench_sched_speed.main()
+    bench_planner.main()
+    bench_roofline.main()
+
+
+if __name__ == "__main__":
+    main()

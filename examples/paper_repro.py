@@ -1,0 +1,37 @@
+"""Full paper reproduction driver: every claim, one script.
+
+    PYTHONPATH=src python examples/paper_repro.py
+
+Covers: prediction accuracy (Fig. 6), throughput vs default/optimal
+(Figs. 3/8), instance selection (Fig. 7), utilization (Fig. 9),
+large-scale scenarios (Fig. 10 / Tables 4-5).
+"""
+
+from benchmarks import (
+    bench_instances,
+    bench_largescale,
+    bench_prediction,
+    bench_sched_speed,
+    bench_throughput,
+    bench_utilization,
+)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    print("# -- Fig. 6: CPU usage prediction --")
+    bench_prediction.main()
+    print("# -- Figs. 3/8: throughput comparison --")
+    bench_throughput.main()
+    print("# -- Fig. 7: instance-count selection --")
+    bench_instances.main()
+    print("# -- Fig. 9: utilization comparison --")
+    bench_utilization.main()
+    print("# -- Fig. 10 / Tables 4-5: large-scale simulation --")
+    bench_largescale.main()
+    print("# -- Sec. 3: scheduler wall-time --")
+    bench_sched_speed.main()
+
+
+if __name__ == "__main__":
+    main()

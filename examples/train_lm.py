@@ -1,0 +1,88 @@
+"""End-to-end training driver: train a ~100M-param qwen1.5-family model on a
+synthetic corpus for a few hundred steps with the full runtime (async
+checkpointing, restart safety, watchdog).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--arch qwen1.5-0.5b]
+
+On this CPU container the default config is cut to ~20M params so a few
+hundred steps finish in minutes; pass --full for the real ~100M run.
+"""
+
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.launch import steps as steps_lib
+from repro.models import model as M
+from repro.optim import adamw
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params (slower on CPU)")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    base = get_config(args.arch)
+    if args.full:
+        # ~100M: 12 layers at the arch's native width.
+        cfg = dataclasses.replace(
+            base, n_layers=min(base.n_layers, 12), dtype="float32",
+            param_dtype="float32", remat=False,
+        )
+    else:
+        cfg = dataclasses.replace(
+            base.reduced(), name=base.name + "-mini",
+            d_model=256, n_heads=8, n_kv_heads=min(base.n_kv_heads, 8),
+            head_dim=32, d_ff=512 if base.d_ff else 0, vocab_size=4096,
+            n_layers=4, block_pattern=base.reduced().block_pattern[:4]
+            if base.block_pattern else (),
+        )
+    print(f"training {cfg.name}: {cfg.n_layers}L d={cfg.d_model} vocab={cfg.vocab_size}")
+
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, weight_decay=0.01)
+    lr_fn = adamw.cosine_schedule(1e-3, warmup_steps=20, total_steps=args.steps)
+
+    def init_state():
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        n = sum(x.size for x in jax.tree.leaves(params))
+        print(f"params: {n/1e6:.1f}M")
+        return {"params": params, "opt": adamw.init_opt_state(params, opt_cfg)}
+
+    from repro.models.layers import MeshCtx
+    ctx = MeshCtx(mesh=None)
+
+    @jax.jit
+    def train_step(state, batch):
+        def loss(p):
+            return M.loss_fn(p, cfg, ctx, batch)
+        loss_val, grads = jax.value_and_grad(loss)(state["params"])
+        new_p, new_o, metrics = adamw.adamw_update(
+            state["params"], grads, state["opt"], opt_cfg, lr_fn
+        )
+        return {"params": new_p, "opt": new_o}, dict(metrics, loss=loss_val)
+
+    data = Prefetcher(iter(SyntheticLM(cfg.vocab_size, args.seq_len, args.batch)))
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_train_")
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=ckpt_dir,
+                         ckpt_every=50, log_every=10)
+    out = Trainer(tcfg, train_step, init_state, data).run()
+    first, last = out["losses"][0], out["losses"][-1]
+    print(f"\nloss {first:.3f} -> {last:.3f} over {out['final_step']} steps "
+          f"(checkpoints in {ckpt_dir})")
+    assert last < first, "training did not reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the full published config; every config module
+exposes ``CONFIG``. The paper's own benchmark topologies live in
+``repro.configs.paper_topologies``.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig, SHAPES, ShapeConfig
+
+ARCHS = (
+    "recurrentgemma_2b",
+    "deepseek_v3_671b",
+    "granite_moe_1b_a400m",
+    "xlstm_125m",
+    "whisper_tiny",
+    "internlm2_1_8b",
+    "yi_9b",
+    "starcoder2_7b",
+    "qwen1_5_0_5b",
+    "qwen2_vl_72b",
+)
+
+_ALIASES = {
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "xlstm-125m": "xlstm_125m",
+    "whisper-tiny": "whisper_tiny",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "yi-9b": "yi_9b",
+    "starcoder2-7b": "starcoder2_7b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = _ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    if mod_name not in ARCHS:
+        raise KeyError(f"unknown arch '{name}'; known: {sorted(_ALIASES)}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+__all__ = ["ARCHS", "get_config", "get_shape", "SHAPES"]

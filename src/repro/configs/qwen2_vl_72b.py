@@ -1,0 +1,26 @@
+"""Qwen2-VL-72B [arXiv:2409.12191; hf] — transformer backbone only.
+
+80 layers, d_model 8192, 64 heads (GQA kv=8), d_ff 29568, vocab 152064,
+M-RoPE (temporal/height/width sections). The vision patch frontend is a
+STUB: input_specs() supplies precomputed patch embeddings + M-RoPE position
+streams.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152_064,
+    qkv_bias=True,
+    mrope_sections=(16, 24, 24),  # pairs: sums to head_dim/2 = 64
+    rope_theta=1e6,
+    embedding_inputs=True,
+    opt_state_dtype="bfloat16",
+    fsdp_over_pod=True,
+)

@@ -1,0 +1,70 @@
+"""Core: faithful reproduction of the paper's scheduling algorithms.
+
+Public API:
+  graphs:      UserGraph, ExecutionGraph, linear/diamond/star topologies
+  profiling:   Profile, Cluster, paper_profile, paper_cluster
+  prediction:  predict (eq. 5/6)
+  simulator:   simulate, simulate_batch, measured_tcu (§6.3 ground truth)
+  schedulers:  schedule (Alg. 1+2), round_robin_schedule, optimal_schedule
+  metrics:     weighted_utilization, prediction_accuracy, gain_ratio
+"""
+
+from repro.core.cost_model import (
+    Prediction,
+    component_rates,
+    instance_rates,
+    max_stable_rate,
+    max_stable_rate_batch,
+    predict,
+)
+from repro.core.first_assignment import first_assignment
+from repro.core.graph import (
+    ExecutionGraph,
+    UserGraph,
+    diamond_topology,
+    linear_topology,
+    rolling_count_topology,
+    star_topology,
+    unique_visitor_topology,
+)
+from repro.core.maximize_throughput import Schedule, maximize_throughput, schedule
+from repro.core.metrics import gain_ratio, prediction_accuracy, weighted_utilization
+from repro.core.optimal import OptimalResult, optimal_schedule, placement_score
+from repro.core.profiles import Cluster, Profile, paper_cluster, paper_profile
+from repro.core.round_robin import round_robin_schedule
+from repro.core.simulator import SimResult, measured_tcu, simulate, simulate_batch
+
+__all__ = [
+    "Prediction",
+    "component_rates",
+    "instance_rates",
+    "predict",
+    "first_assignment",
+    "ExecutionGraph",
+    "UserGraph",
+    "diamond_topology",
+    "linear_topology",
+    "rolling_count_topology",
+    "star_topology",
+    "unique_visitor_topology",
+    "Schedule",
+    "maximize_throughput",
+    "schedule",
+    "gain_ratio",
+    "prediction_accuracy",
+    "weighted_utilization",
+    "OptimalResult",
+    "optimal_schedule",
+    "placement_score",
+    "max_stable_rate",
+    "max_stable_rate_batch",
+    "Cluster",
+    "Profile",
+    "paper_cluster",
+    "paper_profile",
+    "round_robin_schedule",
+    "SimResult",
+    "measured_tcu",
+    "simulate",
+    "simulate_batch",
+]

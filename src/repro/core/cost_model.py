@@ -1,0 +1,170 @@
+"""CPU-usage prediction (eq. 5) and rate propagation (eq. 6) — paper §5.2.
+
+Vectorized over components / tasks. All functions are pure NumPy so the
+scheduler's inner loop (which calls these thousands of times) stays
+allocation-light; a batched variant used by the optimal scheduler lives in
+``simulator.py``.
+
+Conventions
+-----------
+* Rates are tuples/second. ``R0`` is the topology input rate injected at
+  every spout.
+* Shuffle grouping splits a component's incoming stream evenly over its
+  instances (the paper's eq. 6 with uniform division), so all instances of a
+  component share one input rate ``CIR_i / N_i``.
+* With multiple downstream components, Storm *replicates* the output stream
+  per subscribing component; within a component it is split evenly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.graph import ExecutionGraph, UserGraph
+from repro.core.profiles import Cluster
+
+__all__ = [
+    "component_rates",
+    "instance_rates",
+    "Prediction",
+    "predict",
+    "max_stable_rate",
+    "max_stable_rate_batch",
+]
+
+
+def component_rates(utg: UserGraph, r0: float) -> np.ndarray:
+    """Component-level input rates CIR (eq. 6 aggregated per component).
+
+    Spouts receive ``r0`` each. For a non-spout component b:
+    ``CIR_b = sum_{(a,b) in E} alpha_a * CIR_a``.
+    """
+    n = utg.n_components
+    cir = np.zeros(n, dtype=np.float64)
+    for s in utg.sources:
+        cir[s] = r0
+    for v in utg.topo_order():
+        out = utg.alpha[v] * cir[v]
+        for c in utg.children(v):
+            cir[c] += out
+    return cir
+
+
+def instance_rates(etg: ExecutionGraph, r0: float) -> np.ndarray:
+    """Per-task input rate IR_i (eq. 6): CIR of its component / N instances."""
+    cir = component_rates(etg.utg, r0)
+    comp = etg.task_component()
+    return cir[comp] / etg.n_instances[comp]
+
+
+@dataclasses.dataclass(frozen=True)
+class Prediction:
+    """Predicted state of an (ETG, cluster, rate) triple.
+
+    Attributes:
+      ir: (T,) per-task input rates.
+      tcu: (T,) predicted per-task CPU utilization (eq. 5).
+      machine_util: (m,) predicted utilization per machine.
+      mac: (m,) remaining capacity (paper's MAC).
+      throughput: predicted overall throughput = sum of task processing
+        rates, assuming no machine is over-utilized (the paper's objective,
+        eq. 2, under the MAC >= 0 constraint).
+    """
+
+    ir: np.ndarray
+    tcu: np.ndarray
+    machine_util: np.ndarray
+    mac: np.ndarray
+    throughput: float
+
+    @property
+    def over_utilized(self) -> np.ndarray:
+        """(m,) bool — machines whose predicted utilization exceeds capacity."""
+        return self.mac < 0.0
+
+    @property
+    def feasible(self) -> bool:
+        return bool(np.all(self.mac >= 0.0))
+
+
+def predict(etg: ExecutionGraph, cluster: Cluster, r0: float) -> Prediction:
+    """eq. 5 over every task of the ETG at topology input rate ``r0``."""
+    comp = etg.task_component()            # (T,)
+    machine = etg.task_machine()           # (T,)
+    task_types = etg.utg.component_types[comp]
+    ir = instance_rates(etg, r0)           # (T,)
+
+    mtypes = cluster.machine_types[machine]
+    e = cluster.profile.e[task_types, mtypes]
+    met = cluster.profile.met[task_types, mtypes]
+    tcu = e * ir + met                     # eq. 5
+
+    util = np.zeros(cluster.n_machines, dtype=np.float64)
+    np.add.at(util, machine, tcu)
+    mac = cluster.capacity - util
+    return Prediction(
+        ir=ir,
+        tcu=tcu,
+        machine_util=util,
+        mac=mac,
+        throughput=float(ir.sum()),
+    )
+
+
+def max_stable_rate(etg: ExecutionGraph, cluster: Cluster) -> tuple[float, float]:
+    """Largest topology input rate with every MAC_w >= 0, and its throughput.
+
+    Because eq. 5/6 are linear in the topology input rate R, the per-machine
+    utilization is ``met_w + R * var_w`` with rate-independent coefficients,
+    so the binding constraint solves in closed form:
+
+        R* = min_w (capacity_w - met_w) / var_w     (over machines, var_w > 0)
+
+    Returns (R*, throughput at R*) where throughput is the paper's objective
+    (eq. 2): the sum of all task processing rates. A placement whose fixed
+    MET overhead alone exceeds some machine's capacity is infeasible at any
+    rate -> (0.0, 0.0).
+    """
+    rate, thpt = max_stable_rate_batch(etg, cluster, etg.task_machine()[None, :])
+    return float(rate[0]), float(thpt[0])
+
+
+def max_stable_rate_batch(
+    etg: ExecutionGraph, cluster: Cluster, task_machine: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized ``max_stable_rate`` over B placements (same instance counts).
+
+    Args:
+      task_machine: (B, T) machine index per task per candidate placement.
+
+    Returns:
+      (rates, throughputs), each (B,).
+    """
+    comp = etg.task_component()
+    task_types = etg.utg.component_types[comp]
+    unit_ir = instance_rates(etg, 1.0)                 # (T,) IR per unit R
+    task_machine = np.asarray(task_machine, dtype=np.int64)
+    B, T = task_machine.shape
+    m = cluster.n_machines
+
+    mtypes = cluster.machine_types[task_machine]       # (B, T)
+    e = cluster.profile.e[task_types[None, :], mtypes]
+    met = cluster.profile.met[task_types[None, :], mtypes]
+
+    rows = np.repeat(np.arange(B), T)
+    cols = task_machine.reshape(-1)
+    var_w = np.zeros((B, m), dtype=np.float64)
+    met_w = np.zeros((B, m), dtype=np.float64)
+    np.add.at(var_w, (rows, cols), (e * unit_ir[None, :]).reshape(-1))
+    np.add.at(met_w, (rows, cols), met.reshape(-1))
+
+    head = cluster.capacity[None, :] - met_w           # (B, m)
+    infeasible = np.any(head < 0.0, axis=1)
+    with np.errstate(divide="ignore"):
+        limits = np.where(var_w > 0.0, head / np.maximum(var_w, 1e-300), np.inf)
+    rates = np.min(limits, axis=1)
+    rates = np.where(infeasible, 0.0, np.clip(rates, 0.0, None))
+    thpt = rates * unit_ir.sum()
+    return rates, thpt

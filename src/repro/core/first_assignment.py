@@ -1,0 +1,48 @@
+"""Algorithm 1 — FirstAssignment (paper §5.3).
+
+Takes the user topology graph and profiling data; emits the minimal
+execution topology graph (one instance per component), each instance placed
+on the machine with the least predicted TCU (eq. 5) at the initial topology
+input rate R0, accounting for load already placed on each machine.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import cost_model
+from repro.core.graph import ExecutionGraph, UserGraph
+from repro.core.profiles import Cluster
+
+__all__ = ["first_assignment"]
+
+
+def first_assignment(utg: UserGraph, cluster: Cluster, r0: float) -> ExecutionGraph:
+    """One instance per component, greedily placed by least predicted TCU.
+
+    Components are visited in topological order so each component's input
+    rate (eq. 6) is known before it is placed. Ties on TCU break toward the
+    machine with the most remaining capacity so the minimal graph never
+    stacks everything on one node.
+    """
+    cir = cost_model.component_rates(utg, r0)  # one instance each => IR = CIR
+    util = np.zeros(cluster.n_machines, dtype=np.float64)
+    placement = np.zeros(utg.n_components, dtype=np.int64)
+
+    for i in utg.topo_order():
+        ttype = int(utg.component_types[i])
+        e_row = cluster.profile.e[ttype][cluster.machine_types]      # (m,)
+        met_row = cluster.profile.met[ttype][cluster.machine_types]  # (m,)
+        tcu = e_row * cir[i] + met_row                               # eq. 5
+        mac_after = cluster.capacity - (util + tcu)
+        # Least-TCU machine; among near-ties prefer max remaining capacity.
+        order = np.lexsort((-mac_after, np.round(tcu, 9)))
+        best = int(order[0])
+        placement[i] = best
+        util[best] += tcu[best]
+
+    return ExecutionGraph(
+        utg=utg,
+        n_instances=np.ones(utg.n_components, dtype=np.int64),
+        assignment=[np.array([placement[i]]) for i in range(utg.n_components)],
+    )

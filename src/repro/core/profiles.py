@@ -1,0 +1,165 @@
+"""Profiling tables: e_ij, MET_ij per (task type, machine type) — paper §5.2.
+
+The paper's pre-process profiling runs every task type on every machine type
+at its saturation point and records:
+
+* ``e_ij``   — average per-tuple execution time (seconds) of task type i on
+               machine type j (Table 3);
+* ``MET_ij`` — Storm's miscellaneous (framework) execution overhead, in CPU
+               utilization points, recovered from eq. 5 at the saturation
+               measurement;
+* ``alpha_i`` — tuple division ratio per component (part of profiling data).
+
+Units, faithful to the paper: TCU (task CPU utilization) is in *percent of
+one machine's CPU* (0..100); e_ij · IR has units (seconds/tuple) ×
+(tuples/second) × 100 ⇒ e_ij below are stored as "CPU-percent per
+(tuple/second)" = seconds × 100. Table 3 lists e_ij in raw seconds; the
+conversion by ×100 happens here once so that eq. 5 reads exactly
+``TCU = e * IR + MET`` against a 100-point machine budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "Profile",
+    "Cluster",
+    "paper_profile",
+    "paper_cluster",
+    "PAPER_E_TABLE3",
+]
+
+# Table 3 (seconds per tuple): rows = task types (lowCompute, midCompute,
+# highCompute), columns = machine types (Machine1 Pentium, Machine2 Core i3,
+# Machine3 Core i5).
+#
+# NOTE: Table 3 reads counter-intuitively (the Pentium shows the *smallest*
+# per-tuple time). We reproduce the table verbatim — the algorithm only needs
+# consistency between profiling and simulation, and we keep the paper's
+# numbers as ground truth.
+PAPER_E_TABLE3 = np.array(
+    [
+        [0.0581, 0.1070, 0.0916],  # lowCompute
+        [0.1030, 0.1844, 0.1680],  # midCompute
+        [0.1915, 0.3449, 0.3207],  # highCompute
+    ]
+)
+
+# Per-machine-type miscellaneous Storm overhead (CPU points). The paper does
+# not tabulate MET; it is recovered per (i, j) during profiling. We model it
+# as a small per-machine-type constant, consistent with "independent of input
+# rate".
+PAPER_MET = np.array([1.5, 1.0, 1.2])
+
+# Spout per-tuple emission cost (seconds): spouts generate rather than
+# process; tiny but nonzero so spout placement matters slightly.
+SPOUT_E = np.array([0.004, 0.006, 0.005])
+
+
+@dataclasses.dataclass(frozen=True)
+class Profile:
+    """Profiling data P for a (task-type × machine-type) universe.
+
+    Attributes:
+      e: (n_task_types, n_machine_types) CPU-percent per unit input rate
+         (i.e. seconds-per-tuple × 100).
+      met: (n_task_types, n_machine_types) constant overhead in CPU points.
+      type_names: task type names.
+      machine_type_names: machine type names.
+    """
+
+    e: np.ndarray
+    met: np.ndarray
+    type_names: tuple[str, ...]
+    machine_type_names: tuple[str, ...]
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "e", np.asarray(self.e, dtype=np.float64))
+        object.__setattr__(self, "met", np.asarray(self.met, dtype=np.float64))
+        if self.e.shape != self.met.shape:
+            raise ValueError("e and met must have the same shape")
+        if np.any(self.e < 0) or np.any(self.met < 0):
+            raise ValueError("profiling constants must be non-negative")
+
+    @property
+    def n_task_types(self) -> int:
+        return self.e.shape[0]
+
+    @property
+    def n_machine_types(self) -> int:
+        return self.e.shape[1]
+
+
+@dataclasses.dataclass(frozen=True)
+class Cluster:
+    """A concrete heterogeneous cluster: machine i has type machine_types[i].
+
+    ``capacity`` is the per-machine CPU budget (the paper's MAC starting
+    value, 100 points per machine).
+    """
+
+    machine_types: np.ndarray
+    capacity: np.ndarray
+    profile: Profile
+
+    def __post_init__(self) -> None:
+        object.__setattr__(
+            self, "machine_types", np.asarray(self.machine_types, dtype=np.int64)
+        )
+        object.__setattr__(self, "capacity", np.asarray(self.capacity, dtype=np.float64))
+        if self.machine_types.ndim != 1:
+            raise ValueError("machine_types must be 1-D")
+        if self.capacity.shape != self.machine_types.shape:
+            raise ValueError("capacity must align with machine_types")
+        if np.any(self.machine_types < 0) or np.any(
+            self.machine_types >= self.profile.n_machine_types
+        ):
+            raise ValueError("machine type index out of profile range")
+
+    @property
+    def n_machines(self) -> int:
+        return int(self.machine_types.shape[0])
+
+    def e_for(self, task_types: np.ndarray) -> np.ndarray:
+        """(len(task_types), n_machines) e matrix for concrete machines."""
+        return self.profile.e[np.asarray(task_types)][:, self.machine_types]
+
+    def met_for(self, task_types: np.ndarray) -> np.ndarray:
+        return self.profile.met[np.asarray(task_types)][:, self.machine_types]
+
+
+def paper_profile() -> Profile:
+    """Task types: 0=spout, 1=lowCompute, 2=midCompute, 3=highCompute."""
+    e_seconds = np.concatenate([SPOUT_E[None, :], PAPER_E_TABLE3], axis=0)
+    e = e_seconds * 100.0  # CPU points per (tuple/second)
+    met = np.broadcast_to(PAPER_MET[None, :], e.shape).copy()
+    met[0] *= 0.5  # spouts carry less framework overhead
+    return Profile(
+        e=e,
+        met=met,
+        type_names=("spout", "lowCompute", "midCompute", "highCompute"),
+        machine_type_names=("pentium", "core_i3", "core_i5"),
+    )
+
+
+def paper_cluster(
+    counts: tuple[int, int, int] = (1, 1, 1), profile: Profile | None = None
+) -> Cluster:
+    """The paper's worker cluster: Machine1 Pentium, Machine2/4 i3, Machine3 i5.
+
+    §6.1 uses three worker nodes (one i3 is the master). ``counts`` gives the
+    number of machines per type — (1, 1, 1) is the paper's worker set;
+    Table 4 scenarios use (2,2,2), (10,10,10), (20,70,90).
+    """
+    profile = profile or paper_profile()
+    types = np.concatenate(
+        [np.full(c, t, dtype=np.int64) for t, c in enumerate(counts)]
+    )
+    return Cluster(
+        machine_types=types,
+        capacity=np.full(types.shape, 100.0),
+        profile=profile,
+    )

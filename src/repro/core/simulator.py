@@ -1,0 +1,209 @@
+"""Rate-based cluster simulator — the paper's §6.3 simulator, vectorized.
+
+Given an ETG, a cluster and an offered topology input rate, compute the
+*measured* steady state: per-task processing rates under machine saturation
+and back-pressure, per-machine utilization, and overall throughput. This is
+the ground truth that (a) the prediction model (eq. 5) is scored against
+(Fig. 6), and (b) all three schedulers are compared on (Figs. 3/8/9/10).
+
+Saturation model
+----------------
+A machine w hosting tasks with offered variable load ``sum_i e_i * IR_i``
+and fixed overhead ``sum_i MET_i`` saturates when total demand exceeds its
+capacity. Under overload the machine applies proportional fair throttling:
+every hosted task processes at ``s_w * IR_i`` with
+
+    s_w = clip((capacity_w - sum MET) / sum(e_i * IR_i), 0, 1).
+
+Throttled output back-pressures downstream components (their input rate is
+the *processed* upstream rate), which is the domino effect of §5.2. Because
+saturation on one machine changes rates feeding other machines, the steady
+state is a fixed point; demand scale factors decrease monotonically along
+iterations, so a short damped fixed-point loop converges (we iterate to
+convergence with a hard cap).
+
+The batched variant evaluates B candidate placements that share one
+instance-count vector in a single vectorized sweep — this is what makes the
+exhaustive optimal scheduler tractable (the paper reports 18 hours for
+27 405 placements; see benchmarks/bench_sched_speed.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.graph import ExecutionGraph
+from repro.core.profiles import Cluster
+
+__all__ = ["SimResult", "simulate", "simulate_batch", "measured_tcu"]
+
+_MAX_ITERS = 200
+_TOL = 1e-10
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    """Steady state of the simulated cluster.
+
+    Attributes:
+      ir: (T,) offered per-task input rate (post-back-pressure).
+      pr: (T,) processing rate actually achieved per task.
+      tcu: (T,) occupied CPU per task at the steady state.
+      machine_util: (m,) per-machine utilization (capped at capacity only by
+        the throttling model itself).
+      throughput: overall topology throughput = sum of task processing rates
+        (the paper's throughput definition, eq. 2).
+    """
+
+    ir: np.ndarray
+    pr: np.ndarray
+    tcu: np.ndarray
+    machine_util: np.ndarray
+    throughput: float
+
+
+def _flat_arrays(etg: ExecutionGraph, cluster: Cluster):
+    comp = etg.task_component()
+    machine = etg.task_machine()
+    ttypes = etg.utg.component_types[comp]
+    mtypes = cluster.machine_types[machine]
+    e = cluster.profile.e[ttypes, mtypes]
+    met = cluster.profile.met[ttypes, mtypes]
+    return comp, machine, e, met
+
+
+def simulate(etg: ExecutionGraph, cluster: Cluster, r0: float) -> SimResult:
+    """Single-placement steady state (thin wrapper over the batched core)."""
+    machine = etg.task_machine()[None, :]
+    batch = simulate_batch(etg, cluster, machine, r0)
+    return SimResult(
+        ir=batch.ir[0],
+        pr=batch.pr[0],
+        tcu=batch.tcu[0],
+        machine_util=batch.machine_util[0],
+        throughput=float(batch.throughput[0]),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchSimResult:
+    ir: np.ndarray            # (B, T)
+    pr: np.ndarray            # (B, T)
+    tcu: np.ndarray           # (B, T)
+    machine_util: np.ndarray  # (B, m)
+    throughput: np.ndarray    # (B,)
+
+
+def simulate_batch(
+    etg: ExecutionGraph,
+    cluster: Cluster,
+    task_machine: np.ndarray,
+    r0: float,
+) -> BatchSimResult:
+    """Evaluate B placements (same instance counts) in one vectorized sweep.
+
+    Args:
+      etg: supplies the UTG and instance counts (its own assignment ignored).
+      task_machine: (B, T) machine index per task per candidate.
+      r0: offered topology input rate at each spout.
+    """
+    utg = etg.utg
+    comp = etg.task_component()                       # (T,)
+    n_inst = etg.n_instances
+    task_machine = np.asarray(task_machine, dtype=np.int64)
+    if task_machine.ndim != 2 or task_machine.shape[1] != comp.shape[0]:
+        raise ValueError("task_machine must be (B, T)")
+    B, T = task_machine.shape
+    m = cluster.n_machines
+
+    ttypes = utg.component_types[comp]                # (T,)
+    mtypes = cluster.machine_types[task_machine]      # (B, T)
+    e = cluster.profile.e[ttypes[None, :], mtypes]    # (B, T)
+    met = cluster.profile.met[ttypes[None, :], mtypes]
+
+    # Fixed MET load per machine (rate independent).
+    rows = np.repeat(np.arange(B), T)
+    cols = task_machine.reshape(-1)
+    met_load = np.zeros((B, m), dtype=np.float64)
+    np.add.at(met_load, (rows, cols), met.reshape(-1))
+
+    topo = utg.topo_order()
+    sources = set(utg.sources)
+    parents = [utg.parents(i) for i in range(utg.n_components)]
+    alpha = utg.alpha
+
+    # Machine demand scale factors, refined to a fixed point.
+    s = np.ones((B, m), dtype=np.float64)
+    cir = np.zeros((B, utg.n_components), dtype=np.float64)
+    pr_comp = np.zeros_like(cir)  # processed (post-throttle) rate per component
+
+    # Mean throttle factor applied to a component's instances, given the
+    # candidate's machine scale factors: instances split rate evenly, so the
+    # component's processed rate is CIR/N * sum_k s[machine of instance k].
+    inst_of_comp = [np.flatnonzero(comp == i) for i in range(utg.n_components)]
+
+    ir_task = np.zeros((B, T), dtype=np.float64)
+    for _ in range(_MAX_ITERS):
+        # Propagate rates in topo order under current throttle factors.
+        for i in topo:
+            if i in sources:
+                cir[:, i] = r0
+            else:
+                cir[:, i] = 0.0
+                for p in parents[i]:
+                    cir[:, i] += alpha[p] * pr_comp[:, p]
+            idx = inst_of_comp[i]
+            per_inst = cir[:, i : i + 1] / float(n_inst[i])     # (B, 1)
+            ir_task[:, idx] = per_inst
+            s_inst = np.take_along_axis(s, task_machine[:, idx], axis=1)
+            pr_comp[:, i] = per_inst[:, 0] * s_inst.sum(axis=1)
+
+        # Recompute machine scale factors from offered variable load.
+        var = e * ir_task                                         # (B, T)
+        var_load = np.zeros((B, m), dtype=np.float64)
+        np.add.at(var_load, (rows, cols), var.reshape(-1))
+        head = np.maximum(cluster.capacity[None, :] - met_load, 0.0)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            s_new = np.where(var_load > head, head / np.maximum(var_load, 1e-300), 1.0)
+        if np.max(np.abs(s_new - s)) < _TOL:
+            s = s_new
+            break
+        s = s_new
+
+    pr_task = ir_task * np.take_along_axis(s, task_machine, axis=1)
+    tcu = e * pr_task + met
+    util = np.zeros((B, m), dtype=np.float64)
+    np.add.at(util, (rows, cols), tcu.reshape(-1))
+    return BatchSimResult(
+        ir=ir_task,
+        pr=pr_task,
+        tcu=tcu,
+        machine_util=util,
+        throughput=pr_task.sum(axis=1),
+    )
+
+
+def measured_tcu(
+    etg: ExecutionGraph,
+    cluster: Cluster,
+    r0: float,
+    seed: int = 0,
+    noise_scale: float = 0.035,
+) -> np.ndarray:
+    """'Measured' per-task CPU utilization with the paper's noise profile.
+
+    §6.2: measurement variance is low when the CPU is lightly or heavily
+    loaded and highest at moderate load. We model the measurement error as
+    zero-mean Gaussian with std ``noise_scale * 100 * 4u(1-u)`` where u is
+    the machine's utilization fraction — a parabola peaking at u=0.5 —
+    truncated so the max |error| stays below the paper's observed 8 points.
+    """
+    sim = simulate(etg, cluster, r0)
+    machine = etg.task_machine()
+    u = np.clip(sim.machine_util[machine] / cluster.capacity[machine], 0.0, 1.0)
+    std = noise_scale * 100.0 * 4.0 * u * (1.0 - u)
+    rng = np.random.default_rng(seed)
+    noise = np.clip(rng.normal(0.0, 1.0, size=std.shape) * std, -7.9, 7.9)
+    return np.clip(sim.tcu + noise, 0.0, None)

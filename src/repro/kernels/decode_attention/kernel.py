@@ -1,0 +1,114 @@
+"""Single-token GQA decode attention as a Pallas TPU kernel.
+
+Decode attention is memory-bound: one query head-group reads the whole KV
+cache once. The kernel streams KV blocks HBM -> VMEM and keeps the online
+softmax state in scratch; queries for all G heads of one KV group ride in
+a single (G x D) tile so each KV byte is read exactly once per group (the
+GQA arithmetic-intensity win).
+
+Grid = (B, Hkv, n_kv_blocks), kv innermost/sequential. Per-row cache
+lengths mask invalid tail slots (scalar-prefetched).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_pallas"]
+
+NEG_INF = -1.0e30
+
+
+def _kernel(
+    len_ref,                    # SMEM (B,) lengths
+    q_ref, k_ref, v_ref,        # VMEM tiles
+    o_ref,
+    m_ref, l_ref, acc_ref,
+    *,
+    block_kv: int,
+    n_kv_blocks: int,
+):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)       # (block_kv, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    scale = q.shape[-1] ** -0.5
+
+    s = jax.lax.dot_general(
+        q * scale, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                             # (G, block_kv)
+    k_pos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < len_ref[bi]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def decode_attention_pallas(
+    q: jax.Array,        # (B, H, D)
+    k: jax.Array,        # (B, S, Hkv, D)
+    v: jax.Array,
+    lengths: jax.Array,  # (B,) int32
+    *,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    bk = min(block_kv, S)
+    n_kv = -(-S // bk)
+
+    qg = q.reshape(B, Hkv, G, D)
+
+    kernel = functools.partial(_kernel, block_kv=bk, n_kv_blocks=n_kv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda bi, hi, ki, lens: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda bi, hi, ki, lens: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda bi, hi, ki, lens: (bi, ki, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda bi, hi, ki, lens: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k, v)
+    return out.reshape(B, H, D)

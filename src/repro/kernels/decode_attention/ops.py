@@ -1,0 +1,20 @@
+"""Jitted wrapper: single-token decode attention over a batched KV cache."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+__all__ = ["decode_attention"]
+
+
+def decode_attention(q, k, v, lengths, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return decode_attention_pallas(q, k, v, lengths)
+    if impl == "interpret":
+        return decode_attention_pallas(q, k, v, lengths, interpret=True)
+    return decode_attention_ref(q, k, v, lengths)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for single-token GQA decode attention over a KV cache."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decode_attention_ref"]
+
+NEG_INF = -2.0e38
+
+
+def decode_attention_ref(
+    q: jax.Array,        # (B, H, D) one query per batch row
+    k: jax.Array,        # (B, S, Hkv, D)
+    v: jax.Array,        # (B, S, Hkv, D)
+    lengths: jax.Array,  # (B,) valid cache length per row
+) -> jax.Array:
+    B, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32) * (D ** -0.5)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    valid = jnp.arange(k.shape[1])[None, :] < lengths[:, None]   # (B, S)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,151 @@
+"""Blocked causal FlashAttention as a Pallas TPU kernel.
+
+Dataflow (TPU-native adaptation of the CUDA flash algorithm):
+
+* Grid = (batch*heads, n_q_blocks, n_kv_blocks); the kv axis is the
+  innermost ("arbitrary"/sequential) dimension so the online-softmax
+  running state lives in VMEM scratch across kv iterations.
+* Per program: q tile (block_q x D) stays resident; k/v tiles
+  (block_kv x D) stream HBM -> VMEM; the MXU computes q@k^T and p@v with
+  128-aligned tiles; running (m, l, acc) update in fp32 on the VPU.
+* Causal + sliding-window masking by absolute positions (queries are
+  right-aligned against the kv span, matching decode/prefill layouts).
+* Out-of-range kv blocks are masked rather than skipped: TPU pallas grids
+  execute the full rectangle, the mask zeroes their contribution (the XLA
+  twin in repro.models.attention skips them statically instead — that
+  asymmetry is why both exist).
+
+Block sizes default to (128, 128): multiples of the 128-lane MXU tile, and
+a (block_q + 2*block_kv) x D x 4B working set that fits v5e VMEM (~16 MB)
+for every assigned head_dim (64..256).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1.0e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref,      # VMEM tiles
+    o_ref,                    # output tile
+    m_ref, l_ref, acc_ref,    # scratch: running max / denom / accumulator
+    *,
+    block_q: int,
+    block_kv: int,
+    seq_q: int,
+    seq_kv: int,
+    causal: bool,
+    window: int,
+    n_kv_blocks: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (block_q, D)
+    k = k_ref[0].astype(jnp.float32)          # (block_kv, D)
+    v = v_ref[0].astype(jnp.float32)
+    scale = q.shape[-1] ** -0.5
+
+    s = jax.lax.dot_general(
+        q * scale, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                          # (block_q, block_kv)
+
+    # absolute positions: queries right-aligned to the kv span
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) \
+        + (seq_kv - seq_q)
+    k_pos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < seq_kv
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= k_pos > (q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_kv", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,   # (B, H, Sq, D)
+    k: jax.Array,   # (B, H, Sk, D)
+    v: jax.Array,   # (B, H, Sk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    bq = min(block_q, Sq)
+    bk = min(block_kv, Sk)
+    n_q = -(-Sq // bq)
+    n_kv = -(-Sk // bk)
+
+    qf = q.reshape(B * H, Sq, D)
+    kf = k.reshape(B * H, Sk, D)
+    vf = v.reshape(B * H, Sk, D)
+
+    kernel = functools.partial(
+        _kernel,
+        block_q=bq,
+        block_kv=bk,
+        seq_q=Sq,
+        seq_kv=Sk,
+        causal=causal,
+        window=window,
+        n_kv_blocks=n_kv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, D)

@@ -1,0 +1,51 @@
+"""Jitted public wrapper for flash attention: GQA layout adaptation +
+backend selection (Pallas on TPU, interpret mode on CPU for tests, the XLA
+chunked path as production CPU fallback)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(
+    q: jax.Array,   # (B, Sq, H, D)  — model layout
+    k: jax.Array,   # (B, Sk, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    impl: str = "auto",
+    block_q: int = 128,
+    block_kv: int = 128,
+) -> jax.Array:
+    """GQA flash attention. Repeats KV heads to query heads and dispatches
+    to the Pallas kernel (TPU), interpret-mode Pallas (tests), or the jnp
+    oracle."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qt = q.transpose(0, 2, 1, 3)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1)
+
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        out = flash_attention_pallas(
+            qt, kt, vt, causal=causal, window=window,
+            block_q=block_q, block_kv=block_kv,
+        )
+    elif impl == "interpret":
+        out = flash_attention_pallas(
+            qt, kt, vt, causal=causal, window=window,
+            block_q=block_q, block_kv=block_kv, interpret=True,
+        )
+    else:
+        out = flash_attention_ref(qt, kt, vt, causal=causal, window=window)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref"]
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(
+    q: jax.Array,   # (B, H, Sq, D)
+    k: jax.Array,   # (B, H, Sk, D)
+    v: jax.Array,   # (B, H, Sk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, k.astype(jnp.float32)
+    )
+    Sq, Sk = q.shape[2], k.shape[2]
+    q_pos = jnp.arange(Sq)[:, None] + (Sk - Sq)  # right-aligned queries
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= k_pos > (q_pos - window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,25 @@
+"""Jitted wrapper for the RG-LRU scan: backend dispatch + gate fusion entry.
+
+``rglru_scan(a, b, h0)`` returns the full hidden sequence; models call it
+with the gated inputs they computed (see repro.models.rglru for the gate
+math this kernel accelerates).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rglru_scan.kernel import rglru_scan_pallas
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+
+__all__ = ["rglru_scan"]
+
+
+def rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array, impl: str = "auto") -> jax.Array:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return rglru_scan_pallas(a, b, h0)
+    if impl == "interpret":
+        return rglru_scan_pallas(a, b, h0, interpret=True)
+    return rglru_scan_ref(a, b, h0)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel: h_t = a_t*h_{t-1} + b_t."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rglru_scan_ref"]
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """Sequential reference. a/b: (B, S, W) f32; h0: (B, W). Returns (B, S, W)."""
+
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(
+        step, h0, (a.transpose(1, 0, 2), b.transpose(1, 0, 2))
+    )
+    return hs.transpose(1, 0, 2)

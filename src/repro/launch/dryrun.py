@@ -1,0 +1,256 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+cell against the production mesh with 512 placeholder host devices, and
+extract the roofline terms from the compiled artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+Per cell this prints/records:
+  * memory_analysis()  — per-device bytes (proves the cell fits 16 GB HBM)
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline terms
+  * collective bytes   — parsed from the partitioned HLO text, summed over
+                         all-gather / all-reduce / reduce-scatter /
+                         all-to-all / collective-permute result shapes
+  * the three roofline terms (seconds) + dominant bottleneck
+  * MODEL_FLOPS = 6·N·D (6·N_active·D for MoE) and its ratio to HLO FLOPs
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config, get_shape
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.dist import partition
+from repro.optim import adamw
+from repro.roofline import (
+    TPU_V5E_CONSTANTS,
+    collective_bytes_from_hlo,
+    model_flops,
+    roofline_terms,
+)
+
+SKIP_LONG = "long_500k requires sub-quadratic attention; skipped for pure full-attention archs (DESIGN.md)"
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    print_analysis: bool = True,
+    overrides: dict | None = None,
+) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = get_shape(shape_name)
+    if shape_name == "long_500k" and not cfg.is_sub_quadratic:
+        return {"arch": arch, "shape": shape_name, "skipped": SKIP_LONG}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    if shape.kind == "train":
+        lowered = _lower_train(cfg, shape, mesh)
+    else:
+        lowered = _lower_serve(cfg, shape, mesh)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    coll = collective_bytes_from_hlo(compiled.as_text())
+
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    # Loop-aware matmul FLOPs from the HLO analyzer (cost_analysis() visits
+    # while bodies once and would undercount a scanned model by ~n_layers x).
+    flops_per_dev = float(coll["matmul_flops"])
+    mem_d = _mem_dict(mem)
+    # HBM traffic floor: args read + outputs written + temps written & read.
+    bytes_per_dev = float(
+        mem_d.get("argument_size_in_bytes", 0)
+        + mem_d.get("output_size_in_bytes", 0)
+        + 2 * mem_d.get("temp_size_in_bytes", 0)
+    )
+    terms = roofline_terms(
+        flops_per_dev=flops_per_dev,
+        bytes_per_dev=bytes_per_dev,
+        coll_bytes_per_dev=coll["total"],
+    )
+    mf = model_flops(cfg, shape)
+    hlo_total = flops_per_dev * n_chips
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "overrides": {k: str(v) for k, v in (overrides or {}).items()},
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": mem_d,
+        "flops_per_device": flops_per_dev,
+        "bytes_per_device": bytes_per_dev,
+        "touched_bytes_per_device": float(coll["touched_bytes"]),
+        "xla_cost_analysis_flops": float(cost.get("flops", 0.0)),
+        "collective_bytes_per_device": coll["total"],
+        "collectives": coll["by_kind"],
+        "collective_counts": coll["counts"],
+        "terms_s": terms,
+        "dominant": max(terms, key=terms.get),
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / hlo_total) if hlo_total else 0.0,
+    }
+    if print_analysis:
+        print(f"== {arch} x {shape_name} on {result['mesh']} ==")
+        print(mem)
+        print({k: v for k, v in cost.items() if k in ("flops", "bytes accessed")})
+        print(json.dumps({k: result[k] for k in
+                          ("terms_s", "dominant", "useful_flops_ratio",
+                           "collective_bytes_per_device")}, indent=2))
+    return result
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    return out
+
+
+def _lower_train(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    opt_cfg = adamw.AdamWConfig(state_dtype=cfg.opt_state_dtype)
+    train_step = steps_lib.make_train_step(cfg, opt_cfg, mesh)
+
+    state_abs = steps_lib.abstract_train_state(cfg, opt_cfg)
+    batch_abs = steps_lib.input_specs(cfg, shape)
+
+    pspecs = partition.param_specs(state_abs["params"], mesh, cfg)
+    state_specs = {
+        "params": pspecs,
+        "opt": {
+            "m": pspecs,
+            "v": pspecs,
+            "step": jax.sharding.PartitionSpec(),
+        },
+    }
+    bspecs = partition.batch_specs(batch_abs, mesh, cfg)
+    in_shardings = (
+        partition.shardings(state_specs, mesh),
+        partition.shardings(bspecs, mesh),
+    )
+    out_shardings = (in_shardings[0], None)
+
+    jitted = jax.jit(
+        train_step,
+        in_shardings=in_shardings,
+        out_shardings=out_shardings,
+        donate_argnums=(0,),
+    )
+    with mesh:
+        return jitted.lower(state_abs, batch_abs)
+
+
+def _lower_serve(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    serve_step = steps_lib.make_serve_step(
+        cfg, mesh, kind="decode" if shape.is_decode else "prefill"
+    )
+    params_abs = steps_lib.abstract_params(cfg)
+    batch_abs = steps_lib.input_specs(cfg, shape)
+    caches_abs = steps_lib.abstract_caches(cfg, shape)
+
+    pspecs = partition.param_specs(params_abs, mesh, cfg)
+    bspecs = partition.batch_specs(batch_abs, mesh, cfg)
+    cspecs = partition.cache_specs(caches_abs, mesh, cfg)
+    in_shardings = (
+        partition.shardings(pspecs, mesh),
+        partition.shardings(bspecs, mesh),
+        partition.shardings(cspecs, mesh),
+    )
+    out_shardings = (None, in_shardings[2])
+
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=in_shardings,
+        out_shardings=out_shardings,
+        donate_argnums=(2,),
+    )
+    with mesh:
+        return jitted.lower(params_abs, batch_abs, caches_abs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--sp", action="store_true",
+                    help="sequence-parallel activations (hillclimb config)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    overrides = {"sequence_parallel": True} if args.sp else None
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        cells = [(a, s) for a in ARCHS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, shape_name in cells:
+        for mp in meshes:
+            tag = f"{arch}_{shape_name}_{'multi' if mp else 'single'}"
+            if args.sp:
+                tag += "_sp"
+            path = out_dir / f"{tag}.json"
+            if path.exists():
+                print(f"-- {tag}: cached")
+                continue
+            try:
+                res = run_cell(arch, shape_name, multi_pod=mp, overrides=overrides)
+            except Exception as e:
+                traceback.print_exc()
+                failures.append(tag)
+                res = {"arch": arch, "shape": shape_name,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "error": f"{type(e).__name__}: {e}"}
+            path.write_text(json.dumps(res, indent=2, default=float))
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module never touches JAX device state — required because the
+dry-run must set XLA_FLAGS before any device query.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_smoke_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    Axes: ``data`` carries batch/FSDP, ``model`` carries TP/EP, ``pod``
+    extends data parallelism hierarchically across pods.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(data: int = 2, model: int = 2) -> jax.sharding.Mesh:
+    """Tiny host-device mesh for CPU integration tests (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count >= data*model)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,105 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Rank the collectives of one dry-run cell by total per-device bytes
+(trip-count aware) — the profiling tool behind the §Perf iterations.
+
+  PYTHONPATH=src python -m repro.launch.rank_collectives --arch X --shape Y [--sp]
+"""
+
+import argparse
+import dataclasses
+import re
+
+import numpy as np
+
+from repro.configs import get_config, get_shape
+from repro.hlo_analysis import _parse_computations, _shape_bytes
+from repro.launch.dryrun import _lower_serve, _lower_train
+from repro.launch.mesh import make_production_mesh
+
+
+def rank(arch: str, shape_name: str, overrides=None, top: int = 18):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=False)
+    lowered = (
+        _lower_train(cfg, shape, mesh)
+        if shape.kind == "train"
+        else _lower_serve(cfg, shape, mesh)
+    )
+    txt = lowered.compile().as_text()
+    comps, entry = _parse_computations(txt)
+
+    # computation -> execution multiplier (while trip counts)
+    mult: dict[str, float] = {}
+
+    def calls_of(comp):
+        out = []
+        for ins in comp.instrs:
+            if ins.op == "while":
+                m = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+                c = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+                t = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.rest)
+                trips = int(t.group(1)) if t else 1
+                if m:
+                    out.append((m.group(1), trips))
+                if c:
+                    out.append((c.group(1), trips))
+            else:
+                for m in re.finditer(
+                    r"(?:calls|to_apply|update_computation|comparator)=%?([\w\.\-]+)",
+                    ins.rest,
+                ):
+                    out.append((m.group(1), 1))
+        return out
+
+    queue = [(entry, 1.0)]
+    while queue:
+        name, w = queue.pop()
+        if name not in comps:
+            continue
+        mult[name] = mult.get(name, 0.0) + w
+        for child, trips in calls_of(comps[name]):
+            queue.append((child, w * trips))
+
+    kinds = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+    items = []
+    for cname, comp in comps.items():
+        w = mult.get(cname, 0.0)
+        if w == 0:
+            continue
+        for ins in comp.instrs:
+            for k in kinds:
+                if ins.op == k or ins.op == k + "-start":
+                    b = _shape_bytes(ins.shape) * w
+                    if ins.op.endswith("-start") and ins.shape.startswith("("):
+                        b /= 2
+                    m = re.search(r'op_name="([^"]+)"', ins.rest)
+                    items.append((b, k, w, (m.group(1) if m else cname)))
+    items.sort(reverse=True)
+    total = sum(i[0] for i in items)
+    print(f"TOTAL {total/1e9:.1f} GB/device/step across {len(items)} collective sites")
+    for b, k, w, name in items[:top]:
+        print(f"{b/1e9:8.2f}GB {k:16s} x{w:<4.0f} {name[:110]}")
+    return items
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--sp", action="store_true")
+    args = ap.parse_args()
+    rank(args.arch, args.shape,
+         overrides={"sequence_parallel": True} if args.sp else None)
+
+
+if __name__ == "__main__":
+    main()

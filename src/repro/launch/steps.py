@@ -1,0 +1,147 @@
+"""Jitted train/serve step builders + abstract input specs for every
+(architecture x shape) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, zero allocation) for every model input, keyed exactly
+like the runtime batch dicts. ``abstract_state`` does the same for params /
+optimizer state / caches, so the dry-run lowers the full training state
+without materializing a single byte.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import partition
+from repro.models import model as M
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.layers import MeshCtx
+from repro.optim import adamw
+
+__all__ = [
+    "input_specs",
+    "abstract_params",
+    "abstract_train_state",
+    "abstract_caches",
+    "make_train_step",
+    "make_serve_step",
+    "mesh_ctx",
+]
+
+
+def mesh_ctx(mesh: jax.sharding.Mesh | None, cfg: ModelConfig) -> MeshCtx:
+    if mesh is None:
+        return MeshCtx(mesh=None)
+    data_axes, tp = partition.mesh_axes(mesh, cfg)
+    return MeshCtx(mesh=mesh, data_axes=data_axes, tp_axis=tp,
+                   seq_sharded=cfg.sequence_parallel)
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs / state
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract batch for one cell.
+
+    train/prefill: the full sequence. decode: one new token + pos0 (the
+    caches hold seq_len history — see ``abstract_caches``).
+    """
+    B = shape.global_batch
+    S = 1 if shape.is_decode else shape.seq_len
+    act_dt = cfg.dtype
+    batch: dict[str, Any] = {}
+
+    if cfg.embedding_inputs:
+        batch["embeds"] = _sds((B, S, cfg.d_model), act_dt)
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, S), "int32")
+    else:
+        batch["tokens"] = _sds((B, S), "int32")
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, S), "int32")
+
+    if cfg.mrope_sections:
+        batch["mrope_positions"] = _sds((3, B, S), "int32")
+
+    if cfg.is_encoder_decoder:
+        if shape.is_decode:
+            # Encoder ran at prefill; decode consumes its cached output.
+            batch["encoder_out"] = _sds((B, cfg.encoder_seq, cfg.d_model), act_dt)
+        else:
+            batch["encoder_embeds"] = _sds((B, cfg.encoder_seq, cfg.d_model), act_dt)
+
+    if shape.is_decode:
+        batch["pos0"] = _sds((), "int32")
+    return batch
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig) -> dict:
+    params = abstract_params(cfg)
+    opt = jax.eval_shape(lambda: adamw.init_opt_state(params, opt_cfg))
+    return {"params": params, "opt": opt}
+
+
+def abstract_caches(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    return jax.eval_shape(
+        lambda: M.init_caches(
+            cfg, shape.global_batch, shape.seq_len, jnp.dtype(cfg.dtype)
+        )
+    )
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, mesh=None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    ctx = mesh_ctx(mesh, cfg)
+
+    def train_step(state, batch):
+        def loss(params):
+            return M.loss_fn(params, cfg, ctx, batch)
+
+        loss_val, grads = jax.value_and_grad(loss)(state["params"])
+        new_params, new_opt, metrics = adamw.adamw_update(
+            state["params"], grads, state["opt"], opt_cfg
+        )
+        metrics = dict(metrics, loss=loss_val)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None, kind: str = "decode"):
+    """decode: one-token step against caches. prefill: fill caches from a
+    full prompt. Returns serve_step(params, batch, caches) -> (logits, caches).
+    """
+    ctx = mesh_ctx(mesh, cfg)
+
+    if kind == "decode":
+        def serve_step(params, batch, caches):
+            return M.decode_step(params, cfg, ctx, batch, caches)
+    else:
+        def serve_step(params, batch, caches):
+            return M.prefill(params, cfg, ctx, batch, caches)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None):
+    return make_serve_step(cfg, mesh, kind="prefill")

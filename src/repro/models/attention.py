@@ -1,0 +1,341 @@
+"""GQA/MQA attention with KV cache: full, causal, and local (windowed).
+
+Supports three lowering shapes:
+* train/prefill — q_len == kv_len, causal (or bidirectional for encoders);
+* decode        — q_len == 1 against a pre-filled cache of ``max_seq`` slots;
+* cross         — decoder queries over fixed encoder keys (Whisper).
+
+The XLA path is used everywhere on CPU and in dry-runs; the Pallas flash
+kernel (repro.kernels.flash_attention) is selected with
+``cfg.attention_impl == "pallas"`` on real TPUs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import MeshCtx, dense, init_dense
+
+__all__ = [
+    "KVCache",
+    "init_attention",
+    "attention_block",
+    "init_kv_cache",
+    "sdpa",
+]
+
+NEG_INF = -2.0e38
+
+
+@dataclasses.dataclass
+class KVCache:
+    """Ring-less KV cache: ``k``/``v`` are (B, S_cache, Hkv, D); ``pos`` is the
+    number of valid entries (same for every row — batched decode steps in
+    lockstep, the usual serving arrangement for fixed-shape benchmarks)."""
+
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array  # scalar int32
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.pos), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    KVCache, KVCache.tree_flatten, KVCache.tree_unflatten
+)
+
+
+def init_kv_cache(
+    batch: int, s_cache: int, n_kv_heads: int, head_dim: int, dtype
+) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, s_cache, n_kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, s_cache, n_kv_heads, head_dim), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_attention(
+    key: jax.Array,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    dtype,
+    qkv_bias: bool = False,
+) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(kq, d_model, n_heads * head_dim, dtype, bias=qkv_bias),
+        "wk": init_dense(kk, d_model, n_kv_heads * head_dim, dtype, bias=qkv_bias),
+        "wv": init_dense(kv, d_model, n_kv_heads * head_dim, dtype, bias=qkv_bias),
+        "wo": init_dense(
+            ko, n_heads * head_dim, d_model, dtype, scale=(n_heads * head_dim) ** -0.5
+        ),
+    }
+
+
+def sdpa(
+    q: jax.Array,          # (B, Sq, H, D)
+    k: jax.Array,          # (B, Sk, Hkv, D)
+    v: jax.Array,          # (B, Sk, Hkv, D)
+    *,
+    causal: bool,
+    window: int = 0,
+    q_positions: jax.Array | None = None,  # (Sq,) absolute positions of queries
+    kv_valid: jax.Array | None = None,     # (Sk,) bool — valid cache slots
+    k_positions: jax.Array | None = None,  # (Sk,) absolute positions of keys
+) -> jax.Array:
+    """Grouped scaled-dot-product attention (pure XLA reference path).
+
+    Masking composes: causal (query pos >= key pos), sliding window
+    (key pos > query pos - window), and cache validity. ``k_positions``
+    overrides the default storage-order positions (ring caches).
+    """
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = D ** -0.5
+
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    # bf16 operands + f32 accumulation (MXU-style): keeps cotangents bf16 —
+    # f32-cast inputs made every backward TP all-reduce carry f32 payloads.
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg * jnp.asarray(scale, q.dtype), k,
+        preferred_element_type=jnp.float32,
+    )
+
+    q_pos = (
+        q_positions
+        if q_positions is not None
+        else jnp.arange(Sq, dtype=jnp.int32)
+    )
+    k_pos = (
+        k_positions
+        if k_positions is not None
+        else jnp.arange(k.shape[1], dtype=jnp.int32)
+    )
+    mask = jnp.ones((Sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= k_pos[None, :] > (q_pos[:, None] - window)
+    if kv_valid is not None:
+        mask &= kv_valid[None, :]
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def sdpa_chunked(
+    q: jax.Array,          # (B, Sq, H, D)
+    k: jax.Array,          # (B, Sk, Hkv, D)
+    v: jax.Array,          # (B, Sk, Hkv, D)
+    *,
+    causal: bool,
+    window: int = 0,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+) -> jax.Array:
+    """Blocked online-softmax attention (FlashAttention dataflow in pure JAX).
+
+    Never materializes the (Sq, Sk) score matrix: a static Python loop over
+    query chunks (so causal block-skipping costs zero FLOPs — the lowered HLO
+    simply omits fully-masked KV blocks) with an inner ``lax.scan`` over KV
+    chunks carrying the running (max, denominator, accumulator). This is the
+    XLA twin of the Pallas flash kernel and the oracle it is tested against.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    Dv = v.shape[-1]
+    G = H // Hkv
+    scale = D ** -0.5
+    nq = -(-Sq // q_chunk)
+
+    # Pad KV to a block multiple: dynamic_slice clamps out-of-range starts,
+    # which would silently misalign the position labels of the final ragged
+    # block (the k_pos < Sk mask assumes slice starts are exact).
+    pad_k = (-Sk) % k_chunk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    outs = []
+    for qi in range(nq):
+        q0 = qi * q_chunk
+        qlen = min(q_chunk, Sq - q0)
+        qb = q[:, q0 : q0 + qlen] * jnp.asarray(scale, q.dtype)
+        qb = qb.reshape(B, qlen, Hkv, G, D)
+        q_pos = q0 + jnp.arange(qlen, dtype=jnp.int32)
+
+        # Static causal/window bounds on which KV blocks can contribute.
+        hi = Sk if not causal else min(Sk, q0 + qlen)
+        lo = 0 if not window else max(0, q0 - window + 1)
+        lo = (lo // k_chunk) * k_chunk
+        nk = -(-max(hi - lo, 0) // k_chunk)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k0 = lo + ki * k_chunk
+            kb = jax.lax.dynamic_slice_in_dim(k, k0, k_chunk, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, k0, k_chunk, axis=1)
+            s = jnp.einsum(
+                "bqkgd,bskd->bkgqs", qb, kb, preferred_element_type=jnp.float32
+            )  # (B, Hkv, G, qlen, k_chunk)
+            k_pos = k0 + jnp.arange(k_chunk, dtype=jnp.int32)
+            mask = k_pos[None, :] < Sk
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window:
+                mask &= k_pos[None, :] > (q_pos[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(q.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, qlen), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qlen), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qlen, Dv), jnp.float32)
+        if nk > 0:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0), jnp.arange(nk, dtype=jnp.int32)
+            )
+        else:
+            m, l, acc = m0, l0, a0
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, qlen, H, Dv)
+        outs.append(out.astype(q.dtype))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+# Use the chunked path once the full score matrix would exceed this many
+# elements per (batch, head) pair — train/prefill shapes take it, short
+# encoder sequences and single-token decode stay on the plain path.
+_CHUNKED_THRESHOLD_SEQ = 2048
+
+
+def attention_block(
+    p: dict,
+    x: jax.Array,                      # (B, Sq, d_model)
+    ctx: MeshCtx,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    causal: bool = True,
+    window: int = 0,
+    rope_fn=None,                      # fn(x4d, positions) -> x4d, or None
+    positions: jax.Array | None = None,  # (Sq,) absolute positions
+    cache: KVCache | None = None,
+    cross_kv: tuple[jax.Array, jax.Array] | None = None,  # encoder K/V
+) -> tuple[jax.Array, KVCache | None]:
+    """Full attention sub-layer: qkv proj -> rope -> (cache update) -> sdpa -> out.
+
+    Returns (output, updated cache). With ``cross_kv`` the cache and rope are
+    ignored (Whisper cross-attention precomputes encoder K/V once).
+    """
+    B, Sq, _ = x.shape
+    q = dense(p["wq"], x).reshape(B, Sq, n_heads, head_dim)
+    q = ctx.shard(q, ctx.data_axes, None, ctx.tp_axis, None)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        if Sq >= _CHUNKED_THRESHOLD_SEQ:
+            out = sdpa_chunked(q, k, v, causal=False)
+        else:
+            out = sdpa(q, k, v, causal=False)
+        out = ctx.shard(out, ctx.data_axes, None, ctx.tp_axis, None)
+        return dense(p["wo"], out.reshape(B, Sq, n_heads * head_dim)), cache
+
+    k = dense(p["wk"], x).reshape(B, Sq, n_kv_heads, head_dim)
+    v = dense(p["wv"], x).reshape(B, Sq, n_kv_heads, head_dim)
+
+    if positions is None:
+        base = cache.pos if cache is not None else 0
+        positions = base + jnp.arange(Sq, dtype=jnp.int32)
+    if rope_fn is not None:
+        q = rope_fn(q, positions)
+        k = rope_fn(k, positions)
+
+    kv_valid = None
+    ring = False
+    fresh_k, fresh_v = k, v
+    if cache is not None:
+        # Rope is applied *before* caching, so stored keys carry their absolute
+        # positions and storage order need not equal position order — which is
+        # what makes the ring layout below legal for sliding windows.
+        s_cache = cache.k.shape[1]
+        if Sq == s_cache:
+            # Full prefill: the whole cache is freshly written.
+            new_k, new_v = k.astype(cache.k.dtype), v.astype(cache.v.dtype)
+        elif Sq > s_cache:
+            # Window-sized ring cache smaller than the prompt: keep the last
+            # s_cache entries, rolled so that slot(P) == P % s_cache.
+            start = (cache.pos + Sq - s_cache) % s_cache
+            new_k = jnp.roll(k[:, -s_cache:].astype(cache.k.dtype), start, axis=1)
+            new_v = jnp.roll(v[:, -s_cache:].astype(cache.v.dtype), start, axis=1)
+        else:
+            # Incremental write (decode): ring addressing covers both the
+            # full-size cache (pos < s_cache always) and window rings.
+            write = cache.pos % s_cache if window else cache.pos
+            new_k = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, write, 0, 0)
+            )
+            new_v = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, write, 0, 0)
+            )
+        ring = bool(window) and s_cache <= window
+        cache = KVCache(k=new_k, v=new_v, pos=cache.pos + Sq)
+        k, v = cache.k, cache.v
+        kv_valid = jnp.arange(s_cache, dtype=jnp.int32) < cache.pos
+
+    # Chunked path for long query spans (train / prefill). During a full-cache
+    # prefill every cache slot is freshly written, so the validity mask is
+    # redundant and the chunked kernel applies directly.
+    if Sq >= _CHUNKED_THRESHOLD_SEQ:
+        # k may by now be the (rolled, window-sized) cache; attention over the
+        # prompt itself uses the freshly-projected pre-cache k/v.
+        out = sdpa_chunked(q, fresh_k, fresh_v, causal=causal, window=window)
+    elif ring:
+        # Ring cache: reconstruct each slot's absolute position (slot i holds
+        # the newest written position congruent to i mod s_cache) and apply
+        # causal + window masks against true positions — storage order is not
+        # position order once the ring has wrapped.
+        s_cache = k.shape[1]
+        slots = jnp.arange(s_cache, dtype=jnp.int32)
+        total = cache.pos  # already includes this step's Sq
+        k_abs = slots + ((total - 1 - slots) // s_cache) * s_cache
+        out = sdpa(
+            q, k, v,
+            causal=True,
+            window=window,
+            q_positions=positions,
+            kv_valid=kv_valid,
+            k_positions=k_abs,
+        )
+    else:
+        out = sdpa(
+            q, k, v,
+            causal=causal,
+            window=window,
+            q_positions=positions,
+            kv_valid=kv_valid,
+        )
+    out = ctx.shard(out, ctx.data_axes, None, ctx.tp_axis, None)
+    return dense(p["wo"], out.reshape(B, Sq, n_heads * head_dim)), cache

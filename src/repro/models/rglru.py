@@ -1,0 +1,150 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block layout (Griffin "recurrent block"):
+
+    x ->  W_in_gate -> GeLU ------------------\
+    x ->  W_in      -> causal conv1d -> RG-LRU -> (*) -> W_out
+
+RG-LRU recurrence (diagonal, elementwise over the lru width):
+
+    r_t = sigmoid(W_a u_t + b_a)              (recurrence gate)
+    i_t = sigmoid(W_x u_t + b_x)              (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)    (decay, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training/prefill evaluates the linear recurrence with an associative scan
+(O(log S) depth — the TPU-friendly replacement for the sequential CUDA scan
+the original implements); decode is a single-step update carrying (h, conv
+window) state. This is also the compute pattern of the Pallas
+``rglru_scan`` kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import MeshCtx, dense, init_dense
+
+__all__ = ["RGLRUState", "init_rglru_block", "rglru_block", "init_rglru_state"]
+
+_DECAY_C = 8.0
+
+
+@dataclasses.dataclass
+class RGLRUState:
+    """Decode state: recurrence vector + trailing conv inputs."""
+
+    h: jax.Array      # (B, W)
+    conv: jax.Array   # (B, conv_width - 1, W)
+
+    def tree_flatten(self):
+        return (self.h, self.conv), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    RGLRUState, RGLRUState.tree_flatten, RGLRUState.tree_unflatten
+)
+
+
+def init_rglru_state(batch: int, cfg: ModelConfig, dtype) -> RGLRUState:
+    w = cfg.lru_width or cfg.d_model
+    return RGLRUState(
+        h=jnp.zeros((batch, w), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    )
+
+
+def init_rglru_block(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    lam = jax.random.uniform(ks[0], (w,), jnp.float32, 0.3, 0.8)
+    return {
+        "w_in": init_dense(ks[1], d, w, dtype),
+        "w_gate": init_dense(ks[2], d, w, dtype),
+        "conv_w": jax.random.normal(ks[3], (cfg.conv_width, w), dtype) * 0.1,
+        "conv_b": jnp.zeros((w,), dtype),
+        "wa": init_dense(ks[4], w, w, dtype, bias=True),
+        "wx": init_dense(ks[5], w, w, dtype, bias=True),
+        # Lambda parameterized so softplus(lambda_raw) > 0.
+        "lambda_raw": jnp.log(jnp.expm1(lam)),
+        "w_out": init_dense(ks[6], w, d, dtype, scale=w ** -0.5),
+    }
+
+
+def _causal_conv(p: dict, u: jax.Array, history: jax.Array | None) -> jax.Array:
+    """Per-channel causal conv. u: (B, S, W); history: (B, cw-1, W) or None."""
+    cw = p["conv_w"].shape[0]
+    if history is None:
+        history = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    padded = jnp.concatenate([history, u], axis=1)
+    out = jnp.zeros_like(u)
+    for i in range(cw):
+        out = out + padded[:, i : i + u.shape[1]] * p["conv_w"][i]
+    return out + p["conv_b"]
+
+
+def _lru_scan(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t over axis 1, given h_0. a/b: (B, S, W) f32."""
+    # Fold the initial state into the first step, then run the associative
+    # scan for the linear recurrence composition (a2, b2)∘(a1, b1) =
+    # (a1*a2, a2*b1 + b2).
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block(
+    p: dict,
+    x: jax.Array,               # (B, S, d)
+    ctx: MeshCtx,
+    cfg: ModelConfig,
+    state: RGLRUState | None = None,
+) -> tuple[jax.Array, RGLRUState | None]:
+    B, S, _ = x.shape
+    gate = jax.nn.gelu(dense(p["w_gate"], x))
+    u = dense(p["w_in"], x)
+    u = ctx.shard_features(u)
+
+    history = state.conv if state is not None else None
+    u = _causal_conv(p, u, history)
+    new_conv = None
+    if state is not None:
+        cw = p["conv_w"].shape[0]
+        # Keep the last cw-1 raw inputs for the next decode step.
+        tail = jnp.concatenate([state.conv, dense(p["w_in"], x)], axis=1)[:, -(cw - 1):]
+        new_conv = tail
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(p["wa"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["wx"], u).astype(jnp.float32))
+    log_a = -_DECAY_C * jax.nn.softplus(p["lambda_raw"]) * r       # (B,S,W) f32
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-9, None)) * (i * uf)
+
+    h0 = state.h if state is not None else jnp.zeros((B, u.shape[-1]), jnp.float32)
+    if S == 1:  # decode fast path
+        h = (a[:, 0] * h0 + b[:, 0])[:, None]
+    else:
+        h = _lru_scan(a, b, h0)
+    new_state = None
+    if state is not None:
+        new_state = RGLRUState(h=h[:, -1], conv=new_conv)
+
+    y = (h.astype(x.dtype) * gate)
+    y = ctx.shard_features(y)
+    return dense(p["w_out"], y), new_state

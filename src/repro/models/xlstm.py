@@ -1,0 +1,316 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, sequential) — arXiv:2405.04517.
+
+mLSTM cell, per head with key/value dim D:
+
+    C_t = f_t C_{t-1} + i_t (v_t k_t^T)        matrix memory (D, D)
+    n_t = f_t n_{t-1} + i_t k_t                normalizer (D,)
+    h_t = (C_t q_t) / max(|n_t^T q_t|, 1)
+
+with exponential input gate i_t = exp(ĩ_t) and sigmoid-vs-exp forget gate
+stabilized by the running max m_t (Appendix A of the paper):
+
+    m_t = max(log f_t + m_{t-1}, ĩ_t)
+    i'_t = exp(ĩ_t - m_t),  f'_t = exp(log f_t + m_{t-1} - m_t)
+
+Training runs a chunk-parallel evaluation (chunked linear attention with
+per-step decay — the TPU-friendly formulation; the original CUDA kernel is
+fused sequential); decode carries (C, n, m) state. sLSTM is inherently
+sequential (non-diagonal recurrence through h_{t-1}) and runs a time scan in
+both modes.
+
+Block layout follows the paper: mLSTM blocks wrap the cell in an
+up/down-projection (factor 2) with a GeLU gate branch; sLSTM blocks apply
+the cell at model width with a gated output. ``d_ff == 0``: there is no
+separate FFN sub-layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import MeshCtx, dense, init_dense, rms_norm
+
+__all__ = [
+    "MLSTMState",
+    "SLSTMState",
+    "init_mlstm_block",
+    "mlstm_block",
+    "init_mlstm_state",
+    "init_slstm_block",
+    "slstm_block",
+    "init_slstm_state",
+]
+
+_CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MLSTMState:
+    C: jax.Array   # (B, H, D, D)
+    n: jax.Array   # (B, H, D)
+    m: jax.Array   # (B, H)
+
+    def tree_flatten(self):
+        return (self.C, self.n, self.m), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    MLSTMState, MLSTMState.tree_flatten, MLSTMState.tree_unflatten
+)
+
+
+def init_mlstm_state(batch: int, cfg: ModelConfig, dtype) -> MLSTMState:
+    h, d = cfg.n_heads, _mlstm_head_dim(cfg)
+    return MLSTMState(
+        C=jnp.zeros((batch, h, d, d), jnp.float32),
+        n=jnp.zeros((batch, h, d), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+    )
+
+
+def _mlstm_head_dim(cfg: ModelConfig) -> int:
+    return (2 * cfg.d_model) // cfg.n_heads  # cell runs at up-projected width
+
+
+def init_mlstm_block(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    du = 2 * d
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": init_dense(ks[0], d, du, dtype),
+        "w_gate": init_dense(ks[1], d, du, dtype),
+        "wq": init_dense(ks[2], du, du, dtype),
+        "wk": init_dense(ks[3], du, du, dtype),
+        "wv": init_dense(ks[4], du, du, dtype),
+        "w_if": init_dense(ks[5], du, 2 * cfg.n_heads, dtype, bias=True),
+        "out_norm": jnp.zeros((du,), dtype),
+        "w_down": init_dense(ks[6], du, d, dtype, scale=du ** -0.5),
+    }
+
+
+def _mlstm_chunk_parallel(
+    q, k, v, log_i, log_f, state: MLSTMState
+) -> tuple[jax.Array, MLSTMState]:
+    """Chunkwise evaluation. q/k/v: (B, H, S, D) f32; gates: (B, H, S) f32."""
+    B, H, S, D = q.shape
+    nc = S // _CHUNK if S >= _CHUNK else 1
+    chunk = S // nc
+    q = q.reshape(B, H, nc, chunk, D)
+    k = k.reshape(B, H, nc, chunk, D)
+    v = v.reshape(B, H, nc, chunk, D)
+    log_i = log_i.reshape(B, H, nc, chunk)
+    log_f = log_f.reshape(B, H, nc, chunk)
+
+    # Within-chunk cumulative log forget (inclusive) per position.
+    cum_f = jnp.cumsum(log_f, axis=-1)                       # (B,H,nc,chunk)
+
+    def step(carry, xs):
+        C, n, m = carry                                       # (B,H,D,D),(B,H,D),(B,H)
+        qc, kc, vc, lic, lfc, cfc = xs                        # per-chunk slices
+        total_f = cfc[..., -1]                                # sum log f in chunk
+
+        # Stabilizers. Contribution of in-chunk source s<=t at output t has
+        # log-scale cfc[t] - cfc[s] + lic[s]; the carried state enters with
+        # log-scale cfc[t] + m_prev. The sequential recurrence
+        # m_t = max(log_f_t + m_{t-1}, lic_t) therefore unrolls to
+        # m_t = cfc[t] + max(m_prev, cummax_s(lic[s] - cfc[s])).
+        src = lic - cfc                                       # (B,H,chunk)
+        m_t = cfc + jnp.maximum(
+            m[..., None], jax.lax.cummax(src, axis=src.ndim - 1)
+        )
+        m_new = total_f + jnp.maximum(m, jnp.max(src, axis=-1))
+
+        # Decay matrix D[t,s] = exp(cfc[t] - cfc[s] + lic[s] - m_t) masked s<=t.
+        dmat = cfc[..., :, None] - cfc[..., None, :] + lic[..., None, :]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(mask, dmat - m_t[..., :, None], -1e30)
+        w = jnp.exp(dmat)                                     # (B,H,chunk,chunk)
+
+        scores = jnp.einsum("bhtd,bhsd->bhts", qc, kc) * (D ** -0.5)
+        intra = jnp.einsum("bhts,bhsd->bhtd", scores * w, vc)
+        # Normalizer uses the same decay weights against raw keys.
+        n_w = jnp.einsum("bhts,bhsd->bhtd", w, kc)
+
+        # Inter-chunk: state entering the chunk, decayed per position.
+        # C follows the decode-step convention C[v_dim, k_dim].
+        carry_scale = jnp.exp(cfc + m[..., None] - m_t)       # (B,H,chunk)
+        inter = jnp.einsum("bhtk,bhvk->bhtv", qc, C) * (D ** -0.5)
+        inter = inter * carry_scale[..., None]
+        n_carry = n[..., None, :] * carry_scale[..., None]    # (B,H,chunk,D)
+
+        h_num = intra + inter
+        n_tot = n_w + n_carry
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bhtd,bhtd->bht", n_tot, qc * (D ** -0.5))), 1.0
+        )
+        h = h_num / denom[..., None]
+
+        # State update to end of chunk.
+        scale_state = jnp.exp(total_f + m - m_new)            # (B,H)
+        src_scale = jnp.exp(total_f[..., None] - cfc + lic - m_new[..., None])
+        C_new = C * scale_state[..., None, None] + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", src_scale, vc, kc
+        )
+        n_new = n * scale_state[..., None] + jnp.einsum(
+            "bhs,bhsd->bhd", src_scale, kc
+        )
+        return (C_new, n_new, m_new), h
+
+    xs = (
+        q.transpose(2, 0, 1, 3, 4),
+        k.transpose(2, 0, 1, 3, 4),
+        v.transpose(2, 0, 1, 3, 4),
+        log_i.transpose(2, 0, 1, 3),
+        log_f.transpose(2, 0, 1, 3),
+        cum_f.transpose(2, 0, 1, 3),
+    )
+    (C, n, m), hs = jax.lax.scan(step, (state.C, state.n, state.m), xs)
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, D)
+    return h, MLSTMState(C=C, n=n, m=m)
+
+
+def mlstm_block(
+    p: dict,
+    x: jax.Array,                 # (B, S, d)
+    ctx: MeshCtx,
+    cfg: ModelConfig,
+    state: MLSTMState | None = None,
+) -> tuple[jax.Array, MLSTMState | None]:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    up = dense(p["w_up"], x)
+    up = ctx.shard_features(up)
+    gate = jax.nn.gelu(dense(p["w_gate"], x))
+    du = up.shape[-1]
+    D = du // H
+
+    q = dense(p["wq"], up).reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    k = dense(p["wk"], up).reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    v = dense(p["wv"], up).reshape(B, S, H, D).transpose(0, 2, 1, 3)
+    gates = dense(p["w_if"], up).astype(jnp.float32)          # (B,S,2H)
+    log_i = gates[..., :H].transpose(0, 2, 1)                 # (B,H,S)
+    log_f = jax.nn.log_sigmoid(gates[..., H:]).transpose(0, 2, 1)
+
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    st = state if state is not None else init_mlstm_state(B, cfg, x.dtype)
+
+    if S == 1:  # decode
+        m_new = jnp.maximum(log_f[..., 0] + st.m, log_i[..., 0])
+        i_p = jnp.exp(log_i[..., 0] - m_new)
+        f_p = jnp.exp(log_f[..., 0] + st.m - m_new)
+        C = st.C * f_p[..., None, None] + i_p[..., None, None] * (
+            vf[:, :, 0, :, None] * kf[:, :, 0, None, :]
+        )
+        n = st.n * f_p[..., None] + i_p[..., None] * kf[:, :, 0]
+        num = jnp.einsum("bhde,bhe->bhd", C, qf[:, :, 0]) * (D ** -0.5)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qf[:, :, 0])) * (D ** -0.5), 1.0)
+        h = (num / den[..., None])[:, :, None, :]
+        new_state = MLSTMState(C=C, n=n, m=m_new)
+    else:
+        h, new_state = _mlstm_chunk_parallel(qf, kf, vf, log_i, log_f, st)
+
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, du).astype(x.dtype)
+    h = rms_norm(p["out_norm"], h, cfg.norm_eps) * gate
+    h = ctx.shard_features(h)
+    out = dense(p["w_down"], h)
+    return out, (new_state if state is not None else None)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SLSTMState:
+    c: jax.Array   # (B, d)
+    n: jax.Array   # (B, d)
+    h: jax.Array   # (B, d)
+    m: jax.Array   # (B, d)
+
+    def tree_flatten(self):
+        return (self.c, self.n, self.h, self.m), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    SLSTMState, SLSTMState.tree_flatten, SLSTMState.tree_unflatten
+)
+
+
+def init_slstm_state(batch: int, cfg: ModelConfig, dtype) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=z - 1e30)
+
+
+def init_slstm_block(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_z": init_dense(ks[0], d, d, dtype, bias=True),
+        "w_i": init_dense(ks[1], d, d, dtype, bias=True),
+        "w_f": init_dense(ks[2], d, d, dtype, bias=True),
+        "w_o": init_dense(ks[3], d, d, dtype, bias=True),
+        # recurrent (h_{t-1}) connections — the non-diagonal part.
+        "r_z": init_dense(ks[4], d, d, dtype),
+        "w_out": init_dense(ks[5], d, d, dtype, scale=d ** -0.5),
+    }
+
+
+def slstm_block(
+    p: dict,
+    x: jax.Array,
+    ctx: MeshCtx,
+    cfg: ModelConfig,
+    state: SLSTMState | None = None,
+) -> tuple[jax.Array, SLSTMState | None]:
+    B, S, d = x.shape
+    zx = dense(p["w_z"], x).astype(jnp.float32)
+    ix = dense(p["w_i"], x).astype(jnp.float32)
+    fx = dense(p["w_f"], x).astype(jnp.float32)
+    ox = dense(p["w_o"], x).astype(jnp.float32)
+    rw = p["r_z"]["w"].astype(jnp.float32)
+    st = state if state is not None else init_slstm_state(B, cfg, x.dtype)
+
+    def step(carry, xs):
+        c, n, h, m = carry
+        zt, it, ft, ot = xs
+        zt = jnp.tanh(zt + h @ rw)
+        log_f = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(log_f + m - m_new)
+        c_new = f_p * c + i_p * zt
+        n_new = f_p * n + i_p
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    xs = (
+        zx.transpose(1, 0, 2),
+        ix.transpose(1, 0, 2),
+        fx.transpose(1, 0, 2),
+        ox.transpose(1, 0, 2),
+    )
+    (c, n, h, m), hs = jax.lax.scan(step, (st.c, st.n, st.h, st.m), xs)
+    out = hs.transpose(1, 0, 2).astype(x.dtype)
+    out = ctx.shard_tokens(out)
+    new_state = SLSTMState(c=c, n=n, h=h, m=m) if state is not None else None
+    return dense(p["w_out"], out), new_state

@@ -1,0 +1,66 @@
+"""Gradient compression for cross-pod all-reduce (distributed-optimization
+trick for the multi-pod mesh).
+
+Two composable pieces:
+
+* ``to_bf16`` / ``from_bf16`` — cast gradients to bf16 before the (pjit-
+  induced) all-reduce; halves cross-pod ICI bytes at negligible quality
+  cost for LM training.
+* ``Int8ErrorFeedback`` — per-tensor int8 quantization with an error-
+  feedback residual carried in the optimizer loop (1-bit-Adam style, at 8
+  bits): quantize(g + residual) is reduced; the de-quantization error is
+  fed back next step so the compression bias vanishes in expectation.
+
+The training step applies compression *before* grads cross the pod axis —
+under pjit this is expressed by casting the grad tree, which XLA propagates
+into the all-reduce collective itself.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["to_bf16", "from_f32", "init_residual", "quantize_ef", "dequantize"]
+
+
+def to_bf16(grads: Any) -> Any:
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def from_f32(grads: Any, like: Any) -> Any:
+    return jax.tree.map(lambda g, p: g.astype(p.dtype), grads, like)
+
+
+def init_residual(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize_ef(grads: Any, residual: Any) -> tuple[Any, Any, Any]:
+    """int8 error-feedback quantization.
+
+    Returns (q_int8_tree, scales_tree, new_residual_tree). Quantization is
+    symmetric per tensor: q = round(g / s), s = max|g| / 127.
+    """
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        s = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / s), -127, 127).astype(jnp.int8)
+        new_r = g32 - q.astype(jnp.float32) * s
+        return q, s, new_r
+
+    flat, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    qs, ss, rs = zip(*[one(g, r) for g, r in zip(flat, flat_r)])
+    return (
+        jax.tree.unflatten(treedef, qs),
+        jax.tree.unflatten(treedef, ss),
+        jax.tree.unflatten(treedef, rs),
+    )
+
+
+def dequantize(q: Any, scales: Any) -> Any:
+    return jax.tree.map(lambda qq, s: qq.astype(jnp.float32) * s, q, scales)

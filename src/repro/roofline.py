@@ -1,0 +1,143 @@
+"""Roofline-term extraction: HLO analysis, hardware constants, model-FLOPs
+accounting.
+
+Hardware constants (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Methodology notes (see EXPERIMENTS.md §Roofline):
+
+* FLOPs and collective bytes come from ``repro.hlo_analysis.analyze_hlo``
+  over the partitioned per-device HLO — NOT from ``cost_analysis()``,
+  which visits while-loop bodies once and so undercounts a scanned L-layer
+  model by ~L× (verified; see tests/test_roofline.py).
+* The memory term uses the live-buffer traffic floor
+  ``args + outputs + 2·temps`` from ``memory_analysis()`` — params are read
+  once, outputs written once, temporaries written+read. The analyzer's
+  "touched bytes" (every instruction's result, pre-fusion) is recorded as
+  an upper bound.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import numpy as np
+
+__all__ = [
+    "TPU_V5E_CONSTANTS",
+    "collective_bytes_from_hlo",
+    "roofline_terms",
+    "model_flops",
+    "param_counts",
+]
+
+TPU_V5E_CONSTANTS = {
+    "peak_flops": 197e12,   # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,        # bytes/s per chip
+    "ici_bw": 50e9,         # bytes/s per link
+}
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Collective payload bytes per device (loop-trip-count aware)."""
+    from repro.hlo_analysis import analyze_hlo
+
+    c = analyze_hlo(hlo_text)
+    return {
+        "total": c.collective_bytes,
+        "by_kind": c.by_kind,
+        "counts": c.collective_counts,
+        "matmul_flops": c.matmul_flops,
+        "touched_bytes": c.touched_bytes,
+    }
+
+
+def roofline_terms(
+    flops_per_dev: float,
+    bytes_per_dev: float,
+    coll_bytes_per_dev: float,
+    constants: dict = TPU_V5E_CONSTANTS,
+) -> dict:
+    """The three per-step roofline terms, in seconds (per chip)."""
+    return {
+        "compute": flops_per_dev / constants["peak_flops"],
+        "memory": bytes_per_dev / constants["hbm_bw"],
+        "collective": coll_bytes_per_dev / constants["ici_bw"],
+    }
+
+
+def param_counts(cfg) -> dict:
+    """Analytic parameter counts: total and active-per-token."""
+    d, L = cfg.d_model, cfg.n_layers
+    hd = cfg.resolved_head_dim
+    embed = cfg.vocab_size * d
+    head = 0 if cfg.tie_embeddings else cfg.vocab_size * d
+
+    per_layer_total = 0.0
+    per_layer_active = 0.0
+    for i, kind in enumerate(cfg.resolved_block_pattern):
+        if kind in ("attn", "local_attn"):
+            if cfg.use_mla:
+                a = (d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.n_heads *
+                     (cfg.qk_nope_dim + cfg.qk_rope_dim)
+                     + d * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+                     + cfg.kv_lora_rank * cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim)
+                     + cfg.n_heads * cfg.v_head_dim * d)
+            else:
+                a = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd \
+                    + cfg.n_heads * hd * d
+            moe_layer = cfg.is_moe and i >= cfg.n_dense_layers
+            if moe_layer:
+                expert = 3 * d * cfg.moe_d_ff
+                total_ffn = cfg.n_experts * expert + d * cfg.n_experts  # + router
+                active_ffn = cfg.top_k * expert
+                if cfg.n_shared_experts:
+                    shared = 3 * d * cfg.moe_d_ff * cfg.n_shared_experts
+                    total_ffn += shared
+                    active_ffn += shared
+            else:
+                total_ffn = active_ffn = 3 * d * cfg.d_ff
+            per_layer_total += a + total_ffn
+            per_layer_active += a + active_ffn
+        elif kind == "rglru":
+            w = cfg.lru_width or d
+            a = 2 * d * w + 2 * w * w + w * d + cfg.conv_width * w
+            ffn = 3 * d * cfg.d_ff if cfg.d_ff else 0
+            per_layer_total += a + ffn
+            per_layer_active += a + ffn
+        elif kind == "mlstm":
+            du = 2 * d
+            a = 2 * d * du + 3 * du * du + du * 2 * cfg.n_heads + du * d
+            per_layer_total += a
+            per_layer_active += a
+        elif kind == "slstm":
+            a = 6 * d * d
+            per_layer_total += a
+            per_layer_active += a
+
+    enc = 0
+    if cfg.is_encoder_decoder:
+        enc = cfg.encoder_layers * (4 * d * cfg.n_heads * hd + 3 * d * cfg.d_ff
+                                    + 4 * d * cfg.n_heads * hd)
+    total = embed + head + per_layer_total + enc
+    active = embed + head + per_layer_active + enc
+    return {"total": total, "active": active}
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); D = tokens this step.
+
+    Decode steps process global_batch tokens; train/prefill process
+    global_batch x seq_len. Embedding params are excluded from N per the
+    usual convention (table lookups are not matmul FLOPs).
+    """
+    counts = param_counts(cfg)
+    n_active = counts["active"] - cfg.vocab_size * cfg.d_model * (
+        1 if cfg.tie_embeddings else 2
+    )
+    # keep the lm-head matmul (it is real compute): add back one head's worth
+    n_active += cfg.vocab_size * cfg.d_model
+    tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * max(n_active, 0) * tokens

@@ -1,0 +1,121 @@
+"""Heterogeneous accelerator fleet descriptions (the "machines" of the paper).
+
+A fleet is a set of device *pools*; each pool is a number of identical
+device groups (e.g. a TPU v5e pod slice hosting one model replica, or a
+single chip). Pools play the role of the paper's machine types; the
+per-(stage, pool) step-time model plays the role of the e_ij profiling
+table; a pool member's step-time budget plays the role of the 100-point CPU
+capacity.
+
+Hardware constants (TPU v5e, per chip) — the same constants used by the
+roofline analysis:
+
+* peak bf16 compute: 197 TFLOP/s
+* HBM bandwidth:     819 GB/s
+* ICI link bandwidth: ~50 GB/s/link
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "TPU_V5E",
+    "ChipSpec",
+    "DevicePool",
+    "Fleet",
+    "v5e_pod_fleet",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    """Per-chip hardware constants."""
+
+    name: str
+    peak_flops: float       # FLOP/s (bf16)
+    hbm_bw: float           # bytes/s
+    ici_bw: float           # bytes/s per link
+    hbm_bytes: float        # capacity
+
+    def step_seconds(self, flops: float, bytes_moved: float, coll_bytes: float) -> float:
+        """Roofline step time: max of the three terms (no overlap assumed)."""
+        return max(
+            flops / self.peak_flops,
+            bytes_moved / self.hbm_bw,
+            coll_bytes / self.ici_bw,
+        )
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    hbm_bytes=16e9,
+)
+
+# Hypothetical older/newer generations for heterogeneous fleets; ratios are
+# representative of real TPU generation gaps (v4 ~ 275 bf16 TFLOP/s but
+# 1.2 TB/s HBM; an "edge" flavor far weaker) — what matters to the planner
+# is that per-(stage, pool) speeds differ non-uniformly, exactly the
+# heterogeneity structure of the paper's Table 3.
+TPU_V4 = ChipSpec("tpu_v4", peak_flops=275e12, hbm_bw=1228e9, ici_bw=45e9, hbm_bytes=32e9)
+TPU_LITE = ChipSpec("tpu_lite", peak_flops=45e12, hbm_bw=300e9, ici_bw=25e9, hbm_bytes=8e9)
+
+
+@dataclasses.dataclass(frozen=True)
+class DevicePool:
+    """``count`` identical device groups of ``chips_per_group`` chips each.
+
+    One group hosts one model replica (TP spans the group); a group is the
+    paper's "machine".
+    """
+
+    chip: ChipSpec
+    count: int
+    chips_per_group: int = 1
+    name: str = ""
+
+    @property
+    def group_flops(self) -> float:
+        return self.chip.peak_flops * self.chips_per_group
+
+    @property
+    def group_hbm_bw(self) -> float:
+        return self.chip.hbm_bw * self.chips_per_group
+
+    @property
+    def group_hbm_bytes(self) -> float:
+        return self.chip.hbm_bytes * self.chips_per_group
+
+
+@dataclasses.dataclass(frozen=True)
+class Fleet:
+    pools: tuple[DevicePool, ...]
+
+    @property
+    def n_groups(self) -> int:
+        return sum(p.count for p in self.pools)
+
+    def pool_of_group(self) -> np.ndarray:
+        """(n_groups,) pool index per device group."""
+        return np.concatenate(
+            [np.full(p.count, i, dtype=np.int64) for i, p in enumerate(self.pools)]
+        )
+
+
+def v5e_pod_fleet(n_pods: int = 2, groups_per_pod: int = 16, chips_per_group: int = 16) -> Fleet:
+    """The production mesh as a homogeneous fleet: n_pods × 256 chips."""
+    return Fleet(
+        pools=(
+            DevicePool(
+                chip=TPU_V5E,
+                count=n_pods * groups_per_pod,
+                chips_per_group=chips_per_group,
+                name="v5e",
+            ),
+        )
+    )

@@ -1,0 +1,208 @@
+"""Tests for the paper's core scheduling algorithms (repro.core)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ExecutionGraph,
+    UserGraph,
+    component_rates,
+    diamond_topology,
+    first_assignment,
+    instance_rates,
+    linear_topology,
+    max_stable_rate,
+    max_stable_rate_batch,
+    optimal_schedule,
+    paper_cluster,
+    paper_profile,
+    placement_score,
+    predict,
+    round_robin_schedule,
+    schedule,
+    simulate,
+    star_topology,
+)
+from repro.core.refine import refine
+
+
+@pytest.fixture
+def cluster():
+    return paper_cluster((1, 1, 1))
+
+
+# ---------------------------------------------------------------- graphs
+
+def test_topologies_are_dags():
+    for topo in (linear_topology(), diamond_topology(), star_topology()):
+        order = topo.topo_order()
+        assert sorted(order) == list(range(topo.n_components))
+
+
+def test_cycle_rejected():
+    with pytest.raises(ValueError, match="cycle"):
+        UserGraph(
+            name="bad",
+            component_types=np.array([0, 1, 2]),
+            edges=((0, 1), (1, 2), (2, 1)),
+            alpha=np.ones(3),
+        )
+
+
+def test_min_one_instance_enforced():
+    topo = linear_topology()
+    with pytest.raises(ValueError, match="1 instance"):
+        ExecutionGraph(
+            topo,
+            np.array([1, 0, 1, 1]),
+            [np.array([0]), np.zeros(0, np.int64), np.array([0]), np.array([0])],
+        )
+
+
+# ------------------------------------------------------------ rate model
+
+def test_rate_propagation_linear():
+    topo = linear_topology(alpha=2.0)
+    cir = component_rates(topo, 10.0)
+    # spout 10 -> bolt1 gets 10*1 (spout alpha 1), then doubling per bolt
+    assert cir[0] == 10.0
+    assert cir[1] == 10.0
+    assert cir[2] == 20.0
+    assert cir[3] == 40.0
+
+
+def test_rate_propagation_diamond_replicates_per_child():
+    topo = diamond_topology()
+    cir = component_rates(topo, 6.0)
+    # each of the three middle bolts receives the full spout output
+    assert cir[1] == cir[2] == cir[3] == 6.0
+    assert cir[4] == 18.0  # sink sums all three
+
+
+def test_instance_rates_split_evenly(cluster):
+    topo = linear_topology()
+    etg = ExecutionGraph(
+        topo,
+        np.array([1, 1, 2, 4]),
+        [np.array([0]), np.array([1]), np.array([0, 1]), np.array([0, 1, 2, 2])],
+    )
+    ir = instance_rates(etg, 8.0)
+    comp = etg.task_component()
+    assert np.allclose(ir[comp == 2], 4.0)
+    assert np.allclose(ir[comp == 3], 2.0)
+
+
+def test_prediction_linear_in_rate(cluster):
+    """eq. 5: util(r) = MET + r * k, so equal rate deltas give equal util deltas."""
+    topo = linear_topology()
+    etg = first_assignment(topo, cluster, 1.0)
+    p0 = predict(etg, cluster, 0.0)
+    p1 = predict(etg, cluster, 2.0)
+    p2 = predict(etg, cluster, 4.0)
+    assert np.all(p2.machine_util >= p1.machine_util - 1e-12)
+    assert np.allclose(p2.machine_util - p1.machine_util,
+                       p1.machine_util - p0.machine_util)
+
+
+def test_max_stable_rate_matches_prediction_boundary(cluster):
+    topo = linear_topology()
+    sched = schedule(topo, cluster, r0=1.0, rate_epsilon=0.05)
+    rate, thpt = max_stable_rate(sched.etg, cluster)
+    assert predict(sched.etg, cluster, rate).feasible
+    assert not predict(sched.etg, cluster, rate * 1.01).feasible
+    assert thpt == pytest.approx(predict(sched.etg, cluster, rate).throughput)
+
+
+def test_max_stable_rate_batch_consistent(cluster):
+    topo = diamond_topology()
+    etg = first_assignment(topo, cluster, 1.0)
+    tm = np.stack([etg.task_machine(), (etg.task_machine() + 1) % 3])
+    rates, thpts = max_stable_rate_batch(etg, cluster, tm)
+    for i in range(2):
+        e2 = ExecutionGraph(
+            topo, etg.n_instances,
+            [tm[i][etg.task_component() == c] for c in range(topo.n_components)],
+        )
+        r, t = max_stable_rate(e2, cluster)
+        assert rates[i] == pytest.approx(r)
+        assert thpts[i] == pytest.approx(t)
+
+
+# ------------------------------------------------------------ simulator
+
+def test_simulator_matches_prediction_when_stable(cluster):
+    topo = linear_topology()
+    sched = schedule(topo, cluster, r0=1.0, rate_epsilon=0.05)
+    rate, _ = max_stable_rate(sched.etg, cluster)
+    sim = simulate(sched.etg, cluster, rate * 0.95)
+    pred = predict(sched.etg, cluster, rate * 0.95)
+    assert np.allclose(sim.pr, pred.ir, rtol=1e-6)          # nothing throttled
+    assert np.allclose(sim.machine_util, pred.machine_util, rtol=1e-6)
+
+
+def test_simulator_saturates_under_overload(cluster):
+    topo = linear_topology()
+    sched = schedule(topo, cluster, r0=1.0, rate_epsilon=0.05)
+    rate, _ = max_stable_rate(sched.etg, cluster)
+    sim = simulate(sched.etg, cluster, rate * 100)
+    # throughput bounded, machines never exceed capacity materially
+    assert sim.machine_util.max() <= cluster.capacity.max() + 1e-6
+    stable = simulate(sched.etg, cluster, rate)
+    assert sim.throughput <= stable.throughput * 110  # bounded, not linear in rate
+
+
+# ------------------------------------------------------------ schedulers
+
+def test_first_assignment_one_instance_each(cluster):
+    etg = first_assignment(diamond_topology(), cluster, 1.0)
+    assert np.all(etg.n_instances == 1)
+    assert predict(etg, cluster, 1.0).feasible
+
+
+def test_round_robin_cycles(cluster):
+    etg = round_robin_schedule(linear_topology(), cluster, np.array([1, 1, 1, 1]))
+    assert etg.task_machine().tolist() == [0, 1, 2, 0]
+
+
+@pytest.mark.parametrize("topo_fn", [linear_topology, diamond_topology, star_topology])
+def test_schedule_beats_round_robin(topo_fn, cluster):
+    topo = topo_fn()
+    sched = schedule(topo, cluster, r0=1.0, rate_epsilon=0.05)
+    _, ours = max_stable_rate(sched.etg, cluster)
+    rr = round_robin_schedule(topo, cluster, sched.etg.n_instances)
+    _, base = max_stable_rate(rr, cluster)
+    assert ours > base * 1.05  # paper: 7%-44% improvement
+
+
+@pytest.mark.parametrize("topo_fn", [linear_topology, diamond_topology, star_topology])
+def test_schedule_never_overutilizes(topo_fn, cluster):
+    sched = schedule(topo_fn(), cluster, r0=1.0, rate_epsilon=0.05)
+    assert predict(sched.etg, cluster, sched.rate).feasible
+
+
+def test_refined_schedule_within_4pct_of_optimal(cluster):
+    """Paper claim C3 (via the beyond-paper refinement pass)."""
+    for topo_fn in (linear_topology, diamond_topology, star_topology):
+        topo = topo_fn()
+        sched = schedule(topo, cluster, r0=1.0, rate_epsilon=0.05)
+        ref = refine(sched.etg, cluster)
+        opt = optimal_schedule(topo, cluster,
+                               max_total_tasks=max(ref.etg.total_tasks + 1, 8))
+        assert ref.throughput >= 0.96 * opt.throughput, topo.name
+
+
+def test_optimal_beats_or_matches_everything(cluster):
+    topo = linear_topology()
+    sched = schedule(topo, cluster, r0=1.0, rate_epsilon=0.05)
+    opt = optimal_schedule(topo, cluster, max_total_tasks=sched.etg.total_tasks)
+    _, ours = max_stable_rate(sched.etg, cluster)
+    assert opt.throughput >= ours - 1e-9
+
+
+def test_schedule_scales_to_large_cluster():
+    cl = paper_cluster((10, 10, 10))
+    sched = schedule(linear_topology(), cl, r0=1.0, rate_epsilon=1.0)
+    small = schedule(linear_topology(), paper_cluster((1, 1, 1)),
+                     r0=1.0, rate_epsilon=1.0)
+    # 10x machines should give ~10x throughput (within 25%)
+    assert sched.predicted_throughput > 7.5 * small.predicted_throughput

@@ -1,0 +1,208 @@
+"""Substrate tests: optimizer, checkpointing (incl. crash-restart), data
+pipeline determinism, trainer fault tolerance, compression, planner."""
+
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.data.pipeline import MemmapDataset, Prefetcher, SyntheticLM, write_corpus
+from repro.optim import adamw, compression
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+# ----------------------------------------------------------------- optim
+
+def test_adamw_converges_on_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw.init_opt_state(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw.adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_grad_clip_global_norm():
+    grads = {"a": jnp.full((4,), 100.0), "b": jnp.full((4,), -100.0)}
+    clipped, norm = adamw.clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(8 * 100.0 ** 2), rel=1e-5)
+    assert adamw.global_norm(clipped) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_cosine_schedule_shape():
+    lr = adamw.cosine_schedule(1.0, warmup_steps=10, total_steps=100)
+    assert float(lr(jnp.array(0))) == 0.0
+    assert float(lr(jnp.array(10))) == pytest.approx(1.0)
+    assert float(lr(jnp.array(100))) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_int8_error_feedback_unbiased():
+    g = {"w": jnp.array(np.random.default_rng(0).normal(size=512), jnp.float32)}
+    r = compression.init_residual(g)
+    acc = jnp.zeros(512)
+    exact = jnp.zeros(512)
+    for _ in range(50):
+        q, s, r = compression.quantize_ef(g, r)
+        acc = acc + compression.dequantize(q, s)["w"]
+        exact = exact + g["w"]
+    # error feedback keeps the accumulated estimate close to exact
+    rel = float(jnp.abs(acc - exact).max() / jnp.abs(exact).max())
+    assert rel < 0.01
+
+
+# ------------------------------------------------------------ checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "nested": {"b": jnp.ones((3, 3), jnp.bfloat16)},
+            "lst": [jnp.zeros(2), jnp.ones(2)]}
+    store.save(tmp_path, 7, tree)
+    restored, step = store.restore(tmp_path, tree)
+    assert step == 7
+    assert np.allclose(restored["a"], tree["a"])
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_atomicity_partial_write_ignored(tmp_path):
+    tree = {"a": jnp.arange(4.0)}
+    store.save(tmp_path, 1, tree)
+    # simulate a crashed writer: a .tmp directory must be invisible
+    (tmp_path / "step_00000002.tmp").mkdir()
+    assert store.latest_step(tmp_path) == 1
+
+
+def test_checkpoint_retention(tmp_path):
+    tree = {"a": jnp.zeros(1)}
+    for s in range(5):
+        store.save(tmp_path, s, tree)
+    store.retain(tmp_path, keep=2)
+    assert store.latest_step(tmp_path) == 4
+    assert not (tmp_path / "step_00000000").exists()
+
+
+def test_async_checkpointer(tmp_path):
+    ck = store.AsyncCheckpointer(tmp_path, keep=2)
+    for s in range(3):
+        ck.save(s, {"w": jnp.full((4,), float(s))})
+    ck.close()
+    restored, step = store.restore(tmp_path, {"w": jnp.zeros(4)})
+    assert step == 2
+    assert np.allclose(restored["w"], 2.0)
+
+
+# ------------------------------------------------------------------ data
+
+def test_synthetic_batches_deterministic():
+    ds = SyntheticLM(vocab_size=100, seq_len=16, batch=2, seed=3)
+    b1 = ds.batch_at(5)
+    b2 = ds.batch_at(5)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert np.array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_memmap_dataset_restart_safe(tmp_path):
+    write_corpus(tmp_path, n_tokens=4096, vocab_size=64, shard_tokens=1000)
+    ds = MemmapDataset(tmp_path, seq_len=16, batch=4, seed=0)
+    batches = [ds.next_batch() for _ in range(3)]
+    state = ds.state()
+    b_next = ds.next_batch()
+
+    ds2 = MemmapDataset(tmp_path, seq_len=16, batch=4, seed=0)
+    ds2.seek(state)
+    b_resumed = ds2.next_batch()
+    assert np.array_equal(b_next["tokens"], b_resumed["tokens"])
+
+
+def test_prefetcher_preserves_order():
+    it = iter([{"i": i} for i in range(20)])
+    out = list(Prefetcher(it, depth=3))
+    assert [o["i"] for o in out] == list(range(20))
+
+
+# --------------------------------------------------------------- trainer
+
+def _toy_setup(tmp_path, total=30, ckpt_every=10):
+    def init_state():
+        return {"params": {"w": jnp.zeros(4)},
+                "opt": {"m": jnp.zeros(4), "v": jnp.zeros(4),
+                        "step": jnp.zeros((), jnp.int32)}}
+
+    def train_step(state, batch):
+        w = state["params"]["w"] + 0.1
+        step = state["opt"]["step"] + 1
+        return (
+            {"params": {"w": w}, "opt": dict(state["opt"], step=step)},
+            {"loss": jnp.sum(jnp.square(w - 3.0))},
+        )
+
+    data = SyntheticLM(vocab_size=16, seq_len=4, batch=1)
+    cfg = TrainerConfig(total_steps=total, ckpt_dir=str(tmp_path),
+                        ckpt_every=ckpt_every, log_every=1000)
+    return cfg, train_step, init_state, data
+
+
+def test_trainer_runs_and_checkpoints(tmp_path):
+    cfg, step_fn, init_state, data = _toy_setup(tmp_path)
+    out = Trainer(cfg, step_fn, init_state, data, log=lambda *_: None).run()
+    assert out["final_step"] == 30
+    assert store.latest_step(tmp_path) == 30
+
+
+def test_trainer_restart_resumes(tmp_path):
+    cfg, step_fn, init_state, data = _toy_setup(tmp_path, total=15, ckpt_every=5)
+    Trainer(cfg, step_fn, init_state, data, log=lambda *_: None).run()
+    # continue to 30: the new trainer must resume from step 15, not restart
+    cfg2, *_ = _toy_setup(tmp_path, total=30, ckpt_every=5)
+    out = Trainer(cfg2, step_fn, init_state, data, log=lambda *_: None).run()
+    assert out["final_step"] == 30
+    final_w = float(np.asarray(out["state"]["params"]["w"])[0])
+    assert final_w == pytest.approx(3.0, rel=1e-5)  # 30 steps x 0.1 exactly once
+
+
+def test_trainer_skips_nan_steps(tmp_path):
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        loss = jnp.nan if calls["n"] == 3 else jnp.float32(1.0)
+        return state, {"loss": loss}
+
+    cfg, _, init_state, data = _toy_setup(tmp_path, total=6)
+    out = Trainer(cfg, step_fn, init_state, data, log=lambda *_: None).run()
+    assert out["final_step"] == 6
+    assert len(out["losses"]) == 5  # one skipped
+
+
+# ---------------------------------------------------------------- planner
+
+def test_planner_beats_round_robin_on_heterogeneous_fleet():
+    from repro.configs import get_config
+    from repro.sched.fleet import DevicePool, Fleet, TPU_LITE, TPU_V4, TPU_V5E
+    from repro.sched.planner import plan
+
+    fleet = Fleet(pools=(
+        DevicePool(chip=TPU_V5E, count=6, chips_per_group=8, name="v5e"),
+        DevicePool(chip=TPU_LITE, count=10, chips_per_group=4, name="lite"),
+    ))
+    p = plan(get_config("yi-9b"), fleet, n_stages=3)
+    assert p.tokens_per_s > p.baseline_tokens_per_s
+    assert p.replicas.sum() >= p.n_stages  # every stage placed
+
+
+def test_elastic_replan_reduces_then_restores():
+    from repro.configs import get_config
+    from repro.sched.elastic import ElasticController
+    from repro.sched.fleet import DevicePool, Fleet, TPU_V5E
+    fleet = Fleet(pools=(DevicePool(chip=TPU_V5E, count=8, chips_per_group=8, name="v5e"),))
+    ec = ElasticController(get_config("qwen1.5-0.5b"), fleet, n_stages=2)
+    r0 = ec.admission_rate
+    ec.fail(0, 4)
+    assert ec.admission_rate < r0
+    ec.restore(0, 4)
+    assert ec.admission_rate == pytest.approx(r0, rel=1e-6)
