@@ -33,7 +33,7 @@ def main() -> None:
     bench_instances.main()
     bench_utilization.main()
     bench_largescale.main()
-    bench_sched_speed.main()
+    bench_sched_speed.main(json_path="BENCH_sched.json")
     bench_planner.main()
     bench_roofline.main()
 

@@ -32,6 +32,7 @@ from repro.core.metrics import gain_ratio, prediction_accuracy, weighted_utiliza
 from repro.core.optimal import OptimalResult, optimal_schedule, placement_score
 from repro.core.profiles import Cluster, Profile, paper_cluster, paper_profile
 from repro.core.round_robin import round_robin_schedule
+from repro.core.schedule_state import ScheduleState
 from repro.core.simulator import SimResult, measured_tcu, simulate, simulate_batch
 
 __all__ = [
@@ -48,6 +49,7 @@ __all__ = [
     "star_topology",
     "unique_visitor_topology",
     "Schedule",
+    "ScheduleState",
     "maximize_throughput",
     "schedule",
     "gain_ratio",

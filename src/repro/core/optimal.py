@@ -15,6 +15,9 @@ Xeon server; our beyond-paper speedup comes from three observations:
    no iterative simulation is needed to score a candidate.
 3. All placements sharing an instance-count vector score in one vectorized
    batch (``max_stable_rate_batch``).
+4. Machines of one type (and capacity) are interchangeable, so only one
+   canonical representative per within-type permutation class needs
+   scoring (``prune_symmetry``) — the rest are duplicates by symmetry.
 
 See benchmarks/bench_sched_speed.py for the resulting wall-time comparison.
 """
@@ -58,6 +61,43 @@ def _counts_to_assignment(counts: Sequence[int]) -> np.ndarray:
     return np.asarray(out, dtype=np.int64)
 
 
+def _symmetry_runs(cluster: Cluster) -> list[tuple[int, int]]:
+    """Maximal runs [start, end) of consecutive identical machines.
+
+    Machines with the same type and capacity are interchangeable: permuting
+    them permutes a placement without changing its score. Only runs of
+    length >= 2 matter.
+    """
+    key = list(zip(cluster.machine_types.tolist(), cluster.capacity.tolist()))
+    runs: list[tuple[int, int]] = []
+    start = 0
+    for w in range(1, cluster.n_machines + 1):
+        if w == cluster.n_machines or key[w] != key[start]:
+            if w - start >= 2:
+                runs.append((start, w))
+            start = w
+    return runs
+
+
+def _is_canonical(combo: tuple[tuple[int, ...], ...], runs: list[tuple[int, int]]) -> bool:
+    """Keep one representative per machine-permutation equivalence class.
+
+    ``combo[c][w]`` is the number of component-c instances on machine w.
+    Within each run of identical machines, require the joint per-machine
+    columns (count vectors across all components) to be lexicographically
+    non-increasing; every equivalence class under within-run permutations
+    contains exactly one such representative.
+    """
+    for start, end in runs:
+        prev = tuple(counts[start] for counts in combo)
+        for w in range(start + 1, end):
+            col = tuple(counts[w] for counts in combo)
+            if col > prev:
+                return False
+            prev = col
+    return True
+
+
 @dataclasses.dataclass(frozen=True)
 class OptimalResult:
     etg: ExecutionGraph
@@ -72,6 +112,7 @@ def optimal_schedule(
     max_total_tasks: int,
     max_per_machine: int | None = None,
     batch_size: int = 8192,
+    prune_symmetry: bool = True,
 ) -> OptimalResult:
     """Exhaustive search. Exponential — only for small benchmark topologies.
 
@@ -82,9 +123,17 @@ def optimal_schedule(
         ``sum k_j``).
       max_per_machine: optional per-machine k_j cap on simultaneous tasks.
       batch_size: placements scored per vectorized sweep.
+      prune_symmetry: machines of one type (and capacity) are
+        interchangeable for scoring, so only canonical representatives of
+        each within-type permutation class are evaluated — on the paper's
+        3-type clusters this shrinks the candidate space combinatorially
+        (roughly by ``prod_types c_t!`` on spread-out placements). The
+        winning canonical placement *is* a concrete placement; disabling
+        this re-enumerates every symmetric duplicate (for tests/audits).
     """
     n = utg.n_components
     m = cluster.n_machines
+    runs = _symmetry_runs(cluster) if prune_symmetry else []
     best_etg: ExecutionGraph | None = None
     best_thpt = -1.0
     evaluated = 0
@@ -121,6 +170,8 @@ def optimal_schedule(
             flat_batch.clear()
 
         for combo in itertools.product(*per_comp_opts):
+            if runs and not _is_canonical(combo, runs):
+                continue
             if max_per_machine is not None:
                 per_machine = np.sum(np.asarray(combo), axis=0)
                 if np.any(per_machine > max_per_machine):

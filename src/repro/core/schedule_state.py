@@ -1,0 +1,356 @@
+"""Incremental scheduling engine: flat ScheduleState + closed-form stepping.
+
+The reference implementation of Algorithm 2 (``maximize_throughput`` in
+``maximize_throughput.py``) re-derives everything from the ``ExecutionGraph``
+on every iteration: ``predict`` walks all T tasks, ``with_new_instance``
+copies the whole graph, and ``_grow_component`` runs a full greedy placement
+attempt for *every* candidate target count — on the paper's large scenario
+(20/70/90 machines, 478 tasks) that is ~600k O(m) numpy calls and ~25 s of
+wall clock for 46 algorithm iterations.
+
+This module rebuilds the hot path around three observations (see DESIGN.md
+§Arch-applicability notes for the full derivation):
+
+1. **Flat structure-of-arrays state.** Instances of one component on one
+   machine are indistinguishable, so the whole schedule collapses to an
+   (n_components, n_machines) count matrix plus per-component instance
+   totals. Adding an instance is an O(m) delta (the eq. 6 re-split touches
+   only the grown component's row); rollback to the last stable schedule is
+   a cheap snapshot/restore instead of a deep graph copy.
+
+2. **Closed-form rate stepping.** eq. 5/6 are linear in the topology input
+   rate R, so per-machine utilization is ``met_load + R * var_load`` with
+   rate-independent coefficients and the binding machine's maximum stable
+   rate has the closed form ``R* = min_w (cap_w - met_w) / var_w``. The
+   raise loop jumps through its geometric schedule comparing against R*
+   (O(1) per step after one O(m) reduction per structural change) instead
+   of re-predicting all T tasks per step. Iterations within a relative
+   guard band of R* fall back to the per-machine utilization check
+   (same eq. 6 propagation as the reference; the per-machine sum is
+   grouped per component rather than per task, a last-ulp association
+   difference — the golden equivalence suite is the gate that boundary
+   decisions agree in practice). Trace semantics (one trace entry per
+   Algorithm-2 iteration) are preserved.
+
+3. **Closed-form growth feasibility.** Inside ``_grow_component`` the new
+   chunk TCU is a fixed per-machine value, so greedy placement of k new
+   instances succeeds iff ``sum_w max(0, floor(avail_w / tcu_w) - counts_w)
+   >= k`` — no per-instance simulation needed to *reject* a target count.
+   The scan over candidate targets becomes one vectorized (n_targets, m)
+   computation; the exact reference greedy (same lexsort tie-breaking)
+   runs only for the first target the closed form admits, preserving the
+   reference placement order exactly.
+
+The engine is selected via ``schedule(..., engine="incremental")`` (the
+default); ``engine="reference"`` runs the original path. Golden tests in
+``tests/test_sched_equivalence.py`` assert both produce identical final
+``(rate, n_instances, assignment)`` across topologies and cluster sizes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import cost_model
+from repro.core.graph import ExecutionGraph, UserGraph
+from repro.core.profiles import Cluster
+
+__all__ = ["ScheduleState", "maximize_throughput_incremental"]
+
+# Relative half-width of the band around the closed-form R* inside which the
+# raise loop re-checks feasibility with the exact per-machine utilization
+# (guards against last-ulp disagreement between the closed form and the
+# reference's per-task summation order).
+_RSTAR_GUARD = 1e-9
+
+
+class ScheduleState:
+    """Flat, incrementally-updatable schedule state (structure of arrays).
+
+    Instead of per-instance objects, the state stores:
+
+    * ``n_instances``   (n,)   — instance count per component;
+    * ``comp_counts``   (n, m) — instances of component c on machine w;
+    * ``assignment``    list of per-component machine-index lists, in the
+      order instances were added (preserves ``with_new_instance`` append
+      semantics so the final ETG is byte-identical to the reference path);
+    * cached profile slices ``e_cm``/``met_cm`` (n, m) for the concrete
+      cluster, and the unit-rate component input rates ``cir_unit`` (n,).
+
+    Per-machine accumulators ``met_load`` and ``var_load`` (d util / d R)
+    are derived from the count matrix in O(n·m) and cached; structural
+    mutations invalidate the cache. All mutation is O(m) per added
+    instance.
+    """
+
+    __slots__ = (
+        "utg",
+        "cluster",
+        "n_instances",
+        "assignment",
+        "comp_counts",
+        "e_cm",
+        "met_cm",
+        "cir_unit",
+        "_met_load",
+        "_var_load",
+    )
+
+    def __init__(self, utg: UserGraph, cluster: Cluster, etg: ExecutionGraph):
+        self.utg = utg
+        self.cluster = cluster
+        self.n_instances = etg.n_instances.copy()
+        self.assignment = [list(map(int, a)) for a in etg.assignment]
+        n, m = utg.n_components, cluster.n_machines
+        ttypes = utg.component_types
+        self.e_cm = cluster.profile.e[ttypes][:, cluster.machine_types]
+        self.met_cm = cluster.profile.met[ttypes][:, cluster.machine_types]
+        self.cir_unit = cost_model.component_rates(utg, 1.0)
+        self.comp_counts = np.zeros((n, m), dtype=np.int64)
+        for c, machines in enumerate(self.assignment):
+            for w in machines:
+                self.comp_counts[c, w] += 1
+        self._met_load: np.ndarray | None = None
+        self._var_load: np.ndarray | None = None
+
+    @classmethod
+    def from_etg(cls, etg: ExecutionGraph, cluster: Cluster) -> "ScheduleState":
+        return cls(etg.utg, cluster, etg)
+
+    # ------------------------------------------------------------- loads
+
+    @property
+    def met_load(self) -> np.ndarray:
+        """(m,) fixed (rate-independent) MET load per machine."""
+        if self._met_load is None:
+            self._met_load = (self.met_cm * self.comp_counts).sum(axis=0)
+        return self._met_load
+
+    @property
+    def var_load(self) -> np.ndarray:
+        """(m,) d utilization / d rate per machine at the current structure."""
+        if self._var_load is None:
+            per_unit = self.cir_unit / self.n_instances
+            self._var_load = (self.e_cm * self.comp_counts * per_unit[:, None]).sum(
+                axis=0
+            )
+        return self._var_load
+
+    def utilization(self, rate: float) -> np.ndarray:
+        """(m,) predicted machine utilization at topology input rate ``rate``.
+
+        Uses the same eq. 6 propagation as the reference (``component_rates``
+        at the actual rate, not ``cir_unit * rate``) so per-chunk TCUs match
+        the reference floats exactly; the per-machine summation is collapsed
+        from per-task to per-component, which can differ from the
+        reference's ``np.add.at`` accumulation in the last ulp.
+        """
+        cir = cost_model.component_rates(self.utg, rate)
+        per_inst = cir / self.n_instances
+        return self.met_load + (self.e_cm * self.comp_counts * per_inst[:, None]).sum(
+            axis=0
+        )
+
+    def feasible(self, rate: float) -> bool:
+        """Reference feasibility: every machine's MAC >= 0 at ``rate``."""
+        return bool(np.all(self.cluster.capacity - self.utilization(rate) >= 0.0))
+
+    def max_stable_rate(self) -> float:
+        """Closed-form R* = min_w (cap_w - met_w) / var_w (paper eq. 5 linearity)."""
+        head = self.cluster.capacity - self.met_load
+        if np.any(head < 0.0):
+            return 0.0
+        var = self.var_load
+        with np.errstate(divide="ignore"):
+            limits = np.where(var > 0.0, head / np.maximum(var, 1e-300), np.inf)
+        return float(max(np.min(limits), 0.0))
+
+    # --------------------------------------------------------- mutation
+
+    def add_instance(self, component: int, machine: int) -> None:
+        """O(m) delta update: append one instance of ``component`` on ``machine``."""
+        self.comp_counts[component, machine] += 1
+        self.n_instances[component] += 1
+        self.assignment[component].append(int(machine))
+        self._met_load = None
+        self._var_load = None
+
+    def snapshot(self) -> tuple:
+        return (
+            self.n_instances.copy(),
+            self.comp_counts.copy(),
+            [list(a) for a in self.assignment],
+        )
+
+    def restore(self, snap: tuple) -> None:
+        self.n_instances = snap[0].copy()
+        self.comp_counts = snap[1].copy()
+        self.assignment = [list(a) for a in snap[2]]
+        self._met_load = None
+        self._var_load = None
+
+    def to_etg(self) -> ExecutionGraph:
+        return ExecutionGraph(
+            utg=self.utg,
+            n_instances=self.n_instances.copy(),
+            assignment=[np.asarray(a, dtype=np.int64) for a in self.assignment],
+        )
+
+
+def _grow_component_fast(
+    state: ScheduleState,
+    component: int,
+    rate: float,
+    max_extra: int | None = None,
+) -> int:
+    """Incremental equivalent of the reference ``_grow_component``.
+
+    Scans candidate target counts with the closed-form per-machine capacity
+    bound (one vectorized (n_targets, m) pass), then runs the exact greedy
+    (``_greedy_place``, the same code path as the reference engine) for
+    admitted targets only. Mutates ``state`` in place on success.
+
+    Returns the number of instances added (0 if no target packs).
+    """
+    from repro.core.maximize_throughput import _greedy_place
+
+    cluster = state.cluster
+    cap = cluster.capacity
+    m = cluster.n_machines
+    n0 = int(state.n_instances[component])
+    cir_vec = cost_model.component_rates(state.utg, rate)
+    cir = cir_vec[component]
+    e_row = state.e_cm[component]
+    met_row = state.met_cm[component]
+    existing_counts = state.comp_counts[component]
+
+    # Machine load from everything except this component (its variable part
+    # re-splits with the new count; reference subtracts the same quantity).
+    per_inst = cir_vec / state.n_instances
+    util = state.met_load + (
+        state.e_cm * state.comp_counts * per_inst[:, None]
+    ).sum(axis=0)
+    own_tcu = e_row * (cir / n0) + met_row
+    base_load = util - existing_counts * own_tcu
+
+    max_target = n0 + (max_extra if max_extra is not None else max(2 * n0, 2 * m, 16))
+    targets = np.arange(n0 + 1, max_target + 1)
+    if targets.size == 0:
+        return 0
+
+    # Closed-form packing bound: with a fixed per-machine chunk TCU, greedy
+    # placement order cannot change how many chunks fit, so target t packs
+    # iff sum_w max(0, floor(avail_w / tcu_w(t)) - counts_w) >= t - n0.
+    # The +1e-9 slack absorbs the reference's repeated-addition rounding;
+    # admitted targets are confirmed by the exact greedy below.
+    tcu_t = e_row[None, :] * (cir / targets)[:, None] + met_row[None, :]
+    avail = cap - base_load
+    with np.errstate(divide="ignore", invalid="ignore"):
+        fit = np.floor(avail[None, :] / tcu_t + 1e-9)
+    fit = np.where(np.isfinite(fit), fit, 0.0)
+    # A zero-cost chunk (e == met == 0 for this type pair) fits without
+    # bound on any machine that is not already over capacity.
+    unlimited = (tcu_t <= 0.0) & (avail[None, :] >= 0.0)
+    fit = np.where(unlimited, float(max_target), fit)
+    n_new = np.clip(fit - existing_counts[None, :], 0.0, None).sum(axis=1)
+    admitted = targets[n_new >= (targets - n0)]
+
+    for target in admitted:
+        target = int(target)
+        per_ir = cir / target
+        tcu = e_row * per_ir + met_row
+        placed = _greedy_place(cap, base_load, existing_counts, tcu, target - n0)
+        if placed is None:
+            continue
+        for w in placed:
+            state.add_instance(component, w)
+        return len(placed)
+    return 0
+
+
+def _hottest_component(state: ScheduleState, machine: int, rate: float) -> int:
+    """Component owning the hottest task on ``machine`` (reference semantics).
+
+    All instances of a component on one machine share one TCU, and tasks are
+    ordered component-major, so the reference ``argmax`` over per-task TCUs
+    reduces to a first-max argmax over per-component TCUs.
+    """
+    cir = cost_model.component_rates(state.utg, rate)
+    per_inst = cir / state.n_instances
+    tcu_c = state.e_cm[:, machine] * per_inst + state.met_cm[:, machine]
+    present = state.comp_counts[:, machine] > 0
+    return int(np.argmax(np.where(present, tcu_c, -np.inf)))
+
+
+def maximize_throughput_incremental(
+    etg: ExecutionGraph,
+    cluster: Cluster,
+    r0: float,
+    rate_epsilon: float = 1.0,
+    max_iters: int = 100_000,
+):
+    """Algorithm 2 with the incremental engine; reference control flow."""
+    # Imported here, not at module level: maximize_throughput imports this
+    # module lazily, and keeping both imports function-local makes the
+    # non-cycle obvious regardless of which module loads first.
+    from repro.core.maximize_throughput import Schedule
+
+    state = ScheduleState.from_etg(etg, cluster)
+    scale = 1.0
+    current_rate = float(r0)
+    final_snap = state.snapshot()
+    final_rate = 0.0
+    trace: list[tuple[int, str, float]] = []
+    # Closed-form R* for the current structure; None = needs recompute.
+    rstar: float | None = None
+
+    it = 0
+    while it < max_iters:
+        it += 1
+        if rstar is None:
+            rstar = state.max_stable_rate()
+        # Closed-form feasibility: strictly inside R* needs no per-machine
+        # work at all; at or beyond the guarded boundary fall back to the
+        # exact utilization (also needed to pick the over-utilized machine).
+        over = np.zeros(0, dtype=np.int64)
+        if current_rate > rstar * (1.0 - _RSTAR_GUARD):
+            util = state.utilization(current_rate)
+            over = np.flatnonzero(cluster.capacity - util < 0.0)
+        if over.size == 0:
+            final_snap = state.snapshot()
+            final_rate = current_rate
+            increment = current_rate / scale
+            if increment < rate_epsilon:
+                trace.append((it, "terminate", current_rate))
+                break
+            current_rate += increment
+            trace.append((it, "raise_rate", current_rate))
+            continue
+        # Over-utilization: hottest task on the first over-utilized machine.
+        component = _hottest_component(state, int(over[0]), current_rate)
+        added = _grow_component_fast(state, component, current_rate)
+        if added:
+            rstar = None
+            trace.append((it, f"new_instance:c{component}x{added}", current_rate))
+            continue
+        # No candidate machine (reference lines 11-16).
+        if current_rate > scale and final_rate > 0.0:
+            scale *= 2.0
+            state.restore(final_snap)
+            rstar = None
+            current_rate = final_rate + final_rate / scale
+            trace.append((it, "backoff", current_rate))
+            continue
+        trace.append((it, "terminate", final_rate))
+        break
+
+    state.restore(final_snap)
+    final_etg = state.to_etg()
+    pred_final = cost_model.predict(final_etg, cluster, final_rate)
+    return Schedule(
+        etg=final_etg,
+        rate=final_rate,
+        predicted_throughput=pred_final.throughput,
+        iterations=it,
+        trace=trace,
+    )

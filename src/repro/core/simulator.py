@@ -31,6 +31,7 @@ exhaustive optimal scheduler tractable (the paper reports 18 hours for
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -96,11 +97,29 @@ class BatchSimResult:
     throughput: np.ndarray    # (B,)
 
 
+@functools.cache
+def _jax_available() -> bool:
+    # Memoized: failed imports are not cached by Python, so probing per
+    # call would re-walk sys.path on every auto dispatch on JAX-less hosts.
+    try:
+        import jax  # noqa: F401
+
+        return True
+    except Exception:
+        return False
+
+
+# Batches at least this large amortize JAX dispatch/compile overhead on the
+# fixed-point sweep; below it the NumPy path wins.
+_JAX_AUTO_THRESHOLD = 32_768  # B * T elements
+
+
 def simulate_batch(
     etg: ExecutionGraph,
     cluster: Cluster,
     task_machine: np.ndarray,
     r0: float,
+    backend: str = "auto",
 ) -> BatchSimResult:
     """Evaluate B placements (same instance counts) in one vectorized sweep.
 
@@ -108,7 +127,27 @@ def simulate_batch(
       etg: supplies the UTG and instance counts (its own assignment ignored).
       task_machine: (B, T) machine index per task per candidate.
       r0: offered topology input rate at each spout.
+      backend: ``"numpy"`` (reference), ``"jax"`` (jitted
+        ``lax.while_loop`` fixed point, float64 — agrees with NumPy to
+        1e-9), or ``"auto"`` (JAX for large batches when importable, NumPy
+        otherwise). The JAX path falls back to NumPy if JAX is missing.
     """
+    if backend not in ("auto", "numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if backend == "auto":
+        tm = np.asarray(task_machine)
+        backend = (
+            "jax"
+            if tm.size >= _JAX_AUTO_THRESHOLD and _jax_available()
+            else "numpy"
+        )
+    if backend == "jax":
+        if _jax_available():
+            from repro.core.sim_jax import simulate_batch_jax
+
+            return simulate_batch_jax(etg, cluster, task_machine, r0)
+        backend = "numpy"  # graceful fallback: NumPy is the reference path
+
     utg = etg.utg
     comp = etg.task_component()                       # (T,)
     n_inst = etg.n_instances

@@ -1,0 +1,1 @@
+"""Distribution utilities: path-based parameter/batch partitioning."""

@@ -1,0 +1,131 @@
+"""Path-based PartitionSpec assignment for params, batches and caches.
+
+The launch layer (``repro.launch.steps`` / ``repro.launch.dryrun``) wants
+shardings without the model code knowing mesh topology. Conventions follow
+``repro.launch.mesh``: ``data`` (plus optional ``pod``) carries batch/FSDP,
+``model`` carries tensor parallelism.
+
+Assignment is deliberately conservative: a dimension is sharded only when
+its size divides the mesh axis size, so every spec returned here is valid
+on any mesh (replication is always a safe fallback). For parameters the
+*largest* divisible dimension goes to the ``model`` axis — the standard
+Megatron choice for the dominant 2-D kernels and a sound (if not always
+optimal) default for everything else; norm scales, biases and other
+per-shard-identical state replicate by path name (``_REPLICATED_NAMES``).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+__all__ = [
+    "mesh_axes",
+    "param_specs",
+    "batch_specs",
+    "cache_specs",
+    "shardings",
+]
+
+_TP_AXIS = "model"
+_DATA_AXES = ("pod", "data")
+
+# Path-name rules: parameters whose path contains one of these substrings
+# replicate regardless of shape — small vectors whose all-gather cost
+# outweighs any memory saving, or state that must be identical per shard.
+_REPLICATED_NAMES = ("norm", "scale", "bias", "rope", "step", "count")
+
+
+def mesh_axes(mesh: jax.sharding.Mesh, cfg: Any) -> tuple[tuple[str, ...], str]:
+    """(data axes present in the mesh, tensor-parallel axis name)."""
+    present = tuple(a for a in _DATA_AXES if a in mesh.shape)
+    return (present or ("data",)), _TP_AXIS
+
+
+def _axis_size(mesh: jax.sharding.Mesh, axis: str) -> int:
+    return int(mesh.shape.get(axis, 1))
+
+
+def _param_spec(path: str, shape: tuple[int, ...], tp: int) -> PartitionSpec:
+    if tp <= 1 or not shape:
+        return PartitionSpec()
+    lowered = path.lower()
+    if any(s in lowered for s in _REPLICATED_NAMES):
+        return PartitionSpec()
+    # Largest tp-divisible dimension carries the model axis; ties toward the
+    # trailing (output-feature) dimension. 1-D vectors (norm scales, biases)
+    # replicate unless large and divisible (e.g. sharded embedding tables
+    # flattened elsewhere keep their layout).
+    best = -1
+    best_size = 0
+    for d in range(len(shape) - 1, -1, -1):
+        if shape[d] % tp == 0 and shape[d] > best_size:
+            best, best_size = d, shape[d]
+    if best < 0 or (len(shape) == 1 and shape[0] < 4096):
+        return PartitionSpec()
+    spec: list[Any] = [None] * len(shape)
+    spec[best] = _TP_AXIS
+    return PartitionSpec(*spec)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def param_specs(params: Any, mesh: jax.sharding.Mesh, cfg: Any) -> Any:
+    """PartitionSpec pytree matching ``params`` (path-name aware)."""
+    tp = _axis_size(mesh, _TP_AXIS)
+
+    def assign(path, leaf):
+        return _param_spec(_path_str(path), tuple(leaf.shape), tp)
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def _batched_spec(shape: tuple[int, ...], data_axes: tuple[str, ...], dsize: int) -> PartitionSpec:
+    if not shape or shape[0] % dsize != 0:
+        return PartitionSpec()
+    return PartitionSpec(data_axes, *([None] * (len(shape) - 1)))
+
+
+def batch_specs(batch: Any, mesh: jax.sharding.Mesh, cfg: Any) -> Any:
+    """Shard the leading (batch) dimension over the data axes."""
+    data_axes, _ = mesh_axes(mesh, cfg)
+    dsize = 1
+    for a in data_axes:
+        dsize *= _axis_size(mesh, a)
+
+    def assign(path, leaf):
+        shape = tuple(leaf.shape)
+        # mrope positions are (3, B, S): batch is dim 1.
+        if "mrope" in _path_str(path) and len(shape) == 3:
+            if shape[1] % dsize == 0:
+                return PartitionSpec(None, data_axes, None)
+            return PartitionSpec()
+        return _batched_spec(shape, data_axes, dsize)
+
+    return jax.tree_util.tree_map_with_path(assign, batch)
+
+
+def cache_specs(caches: Any, mesh: jax.sharding.Mesh, cfg: Any) -> Any:
+    """KV/state caches are batch-major: shard dim 0 over data axes."""
+    data_axes, _ = mesh_axes(mesh, cfg)
+    dsize = 1
+    for a in data_axes:
+        dsize *= _axis_size(mesh, a)
+
+    def assign(path, leaf):
+        return _batched_spec(tuple(leaf.shape), data_axes, dsize)
+
+    return jax.tree_util.tree_map_with_path(assign, caches)
+
+
+def shardings(specs: Any, mesh: jax.sharding.Mesh) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )

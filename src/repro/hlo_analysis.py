@@ -152,11 +152,21 @@ def _dot_flops(instr: _Instr, comp: _Computation) -> float:
     if not mc:
         return 2.0 * _numel(instr.shape)  # dot with no info: fall back
     cdims = [int(x) for x in mc.group(1).split(",") if x]
-    # first operand name
-    mo = re.match(r"\s*%?([\w\.\-]+)", instr.rest)
+    # First operand: newer HLO text inlines the shape ("dot(f32[a,b]{1,0}
+    # %lhs, ...)"); older text has bare names resolved via comp.shapes.
+    lhs_shape = None
+    mo = re.match(
+        r"\s*([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*%?[\w\.\-]+", instr.rest
+    )
+    if mo:
+        lhs_shape = mo.group(1)
+    else:
+        mo = re.match(r"\s*%?([\w\.\-]+)", instr.rest)
+        if mo and mo.group(1) in comp.shapes:
+            lhs_shape = comp.shapes[mo.group(1)]
     contract = 1
-    if mo and mo.group(1) in comp.shapes:
-        dims = _shape_dims(comp.shapes[mo.group(1)])
+    if lhs_shape:
+        dims = _shape_dims(lhs_shape)
         if dims:
             _, lhs_dims = dims[0]
             for c in cdims:

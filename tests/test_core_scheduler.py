@@ -180,8 +180,10 @@ def test_schedule_never_overutilizes(topo_fn, cluster):
     assert predict(sched.etg, cluster, sched.rate).feasible
 
 
+@pytest.mark.slow
 def test_refined_schedule_within_4pct_of_optimal(cluster):
-    """Paper claim C3 (via the beyond-paper refinement pass)."""
+    """Paper claim C3 (via the beyond-paper refinement pass). ~1 min: the
+    hill climb scores O(T^2) candidate moves per round on three topologies."""
     for topo_fn in (linear_topology, diamond_topology, star_topology):
         topo = topo_fn()
         sched = schedule(topo, cluster, r0=1.0, rate_epsilon=0.05)

@@ -9,6 +9,9 @@ from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.rglru_scan.ops import rglru_scan
 
+# Full interpret-mode kernel sweeps take minutes; run with `pytest -m slow`.
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -11,6 +11,10 @@ from repro.configs import ARCHS, get_config
 from repro.models import model as M
 from repro.models.layers import MeshCtx
 
+# Per-architecture forward/backward smoke tests take minutes on CPU; run
+# with `pytest -m slow`.
+pytestmark = pytest.mark.slow
+
 CTX = MeshCtx(mesh=None)
 KEY = jax.random.PRNGKey(0)
 

@@ -1,0 +1,176 @@
+"""Golden tests: the incremental engine must reproduce the reference path
+exactly, and the JAX simulator backend must agree with NumPy to 1e-9.
+
+These are the acceptance gates for the incremental scheduling engine
+(``repro.core.schedule_state``): same final rate, same instance counts, same
+placement, same iteration trace as the seed implementation — not merely
+"close" — across topology shapes and cluster sizes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    diamond_topology,
+    linear_topology,
+    max_stable_rate,
+    paper_cluster,
+    rolling_count_topology,
+    schedule,
+    simulate_batch,
+    star_topology,
+)
+from repro.core.schedule_state import ScheduleState
+
+TOPOLOGIES = {
+    "linear": linear_topology,
+    "diamond": diamond_topology,
+    "star": star_topology,
+    "rolling_count": rolling_count_topology,  # alpha != 1 exercises eq. 6
+}
+CLUSTERS = {"small": (1, 1, 1), "medium": (2, 2, 2)}
+
+
+def _fingerprint(sched):
+    return (
+        sched.rate,
+        sched.etg.n_instances.tolist(),
+        sched.etg.task_machine().tolist(),
+        sched.iterations,
+        sched.trace,
+    )
+
+
+@pytest.mark.parametrize("topo_name", sorted(TOPOLOGIES))
+@pytest.mark.parametrize("cluster_name", sorted(CLUSTERS))
+def test_incremental_engine_matches_reference(topo_name, cluster_name):
+    topo = TOPOLOGIES[topo_name]()
+    cluster = paper_cluster(CLUSTERS[cluster_name])
+    ref = schedule(topo, cluster, r0=1.0, rate_epsilon=0.05, engine="reference")
+    inc = schedule(topo, cluster, r0=1.0, rate_epsilon=0.05, engine="incremental")
+    assert _fingerprint(inc) == _fingerprint(ref)
+    assert inc.predicted_throughput == pytest.approx(ref.predicted_throughput)
+
+
+def test_incremental_engine_matches_reference_medium_cluster():
+    """(10,10,10): hundreds of instances, multi-instance growth steps."""
+    cluster = paper_cluster((10, 10, 10))
+    topo = linear_topology()
+    ref = schedule(topo, cluster, r0=1.0, rate_epsilon=1.0, engine="reference")
+    inc = schedule(topo, cluster, r0=1.0, rate_epsilon=1.0, engine="incremental")
+    assert _fingerprint(inc) == _fingerprint(ref)
+
+
+def test_large_scenario_golden():
+    """Paper's large scenario (20/70/90): the incremental engine must land on
+    the frozen golden schedule (captured from the seed reference path, which
+    takes ~12-25 s to recompute depending on the machine — too slow here)."""
+    sched = schedule(linear_topology(), paper_cluster((20, 70, 90)),
+                     r0=1.0, rate_epsilon=1.0)
+    assert sched.rate == 297.0
+    assert sched.etg.n_instances.tolist() == [2, 56, 210, 210]
+    assert sched.iterations == 46
+    import hashlib
+
+    digest = hashlib.md5(sched.etg.task_machine().tobytes()).hexdigest()
+    assert digest == "1dfed7471c737dcb63fc259cb03ffe02"
+
+
+def test_optimal_symmetry_pruning_preserves_optimum():
+    """On clusters with duplicate machines, the canonical filter must keep
+    the true optimum while evaluating strictly fewer candidates."""
+    from repro.core import optimal_schedule
+
+    for counts in ((2, 1, 1), (3, 0, 0)):
+        cluster = paper_cluster(counts)
+        full = optimal_schedule(
+            linear_topology(), cluster, max_total_tasks=6, prune_symmetry=False
+        )
+        pruned = optimal_schedule(linear_topology(), cluster, max_total_tasks=6)
+        assert pruned.throughput == pytest.approx(full.throughput, rel=1e-12)
+        assert pruned.rate == pytest.approx(full.rate, rel=1e-12)
+        assert pruned.candidates_evaluated < full.candidates_evaluated
+
+
+def test_schedule_state_loads_match_prediction():
+    """ScheduleState accumulators == per-task predict() on the same graph."""
+    from repro.core import first_assignment, predict
+
+    cluster = paper_cluster((2, 2, 2))
+    etg = first_assignment(diamond_topology(), cluster, 1.0)
+    state = ScheduleState.from_etg(etg, cluster)
+    for rate in (1.0, 3.5, 10.0):
+        pred = predict(etg, cluster, rate)
+        assert np.allclose(state.utilization(rate), pred.machine_util, rtol=1e-12)
+    rstar = state.max_stable_rate()
+    ref_rate, _ = max_stable_rate(etg, cluster)
+    assert rstar == pytest.approx(ref_rate, rel=1e-12)
+
+
+def test_schedule_state_snapshot_roundtrip():
+    cluster = paper_cluster((1, 1, 1))
+    etg = schedule(linear_topology(), cluster, r0=1.0, rate_epsilon=0.5).etg
+    state = ScheduleState.from_etg(etg, cluster)
+    snap = state.snapshot()
+    before = (state.n_instances.copy(), state.var_load.copy(), state.met_load.copy())
+    state.add_instance(2, 1)
+    state.add_instance(3, 0)
+    assert state.n_instances[2] == before[0][2] + 1
+    state.restore(snap)
+    assert np.array_equal(state.n_instances, before[0])
+    assert np.allclose(state.var_load, before[1], rtol=0, atol=0)
+    assert np.allclose(state.met_load, before[2], rtol=0, atol=0)
+    assert state.to_etg().task_machine().tolist() == etg.task_machine().tolist()
+
+
+# ------------------------------------------------------------ JAX backend
+
+
+@pytest.mark.parametrize("topo_name", sorted(TOPOLOGIES))
+def test_simulator_backends_agree(topo_name):
+    """NumPy and JAX fixed points agree to 1e-9 under back-pressure."""
+    pytest.importorskip("jax")
+    topo = TOPOLOGIES[topo_name]()
+    cluster = paper_cluster((2, 2, 2))
+    sched = schedule(topo, cluster, r0=1.0, rate_epsilon=0.5)
+    etg = sched.etg
+    rng = np.random.default_rng(7)
+    tm = rng.integers(0, cluster.n_machines, size=(32, etg.total_tasks))
+    rate, _ = max_stable_rate(etg, cluster)
+    base = max(rate, 1.0)
+    for r0 in (0.5 * base, 3.0 * base, 50.0 * base):  # stable -> saturated
+        a = simulate_batch(etg, cluster, tm, r0, backend="numpy")
+        b = simulate_batch(etg, cluster, tm, r0, backend="jax")
+        for field in ("ir", "pr", "tcu", "machine_util", "throughput"):
+            x, y = getattr(a, field), getattr(b, field)
+            assert np.allclose(x, y, rtol=1e-9, atol=1e-9), (field, r0)
+
+
+def test_backpressure_fixed_point_converges_saturated():
+    """Deep overload: the fixed point must converge (not just hit the iter
+    cap) and respect capacity + back-pressure invariants on both backends."""
+    pytest.importorskip("jax")
+    topo = rolling_count_topology()  # alpha=4 amplifies downstream load
+    cluster = paper_cluster((1, 1, 1))
+    sched = schedule(topo, cluster, r0=1.0, rate_epsilon=0.5)
+    etg = sched.etg
+    rate, _ = max_stable_rate(etg, cluster)
+    tm = etg.task_machine()[None, :]
+    for backend in ("numpy", "jax"):
+        res = simulate_batch(etg, cluster, tm, rate * 1000.0, backend=backend)
+        assert np.all(res.machine_util <= cluster.capacity[None, :] + 1e-6)
+        assert np.all(res.pr <= res.ir + 1e-9)
+        stable = simulate_batch(etg, cluster, tm, rate * 0.99, backend=backend)
+        # saturated throughput is bounded, not linear in offered rate
+        assert res.throughput[0] <= stable.throughput[0] * 1100
+
+
+def test_simulator_backend_fallback_and_validation():
+    cluster = paper_cluster((1, 1, 1))
+    etg = schedule(linear_topology(), cluster, r0=1.0, rate_epsilon=0.5).etg
+    tm = etg.task_machine()[None, :]
+    with pytest.raises(ValueError, match="backend"):
+        simulate_batch(etg, cluster, tm, 1.0, backend="tpu")
+    auto = simulate_batch(etg, cluster, tm, 1.0, backend="auto")
+    ref = simulate_batch(etg, cluster, tm, 1.0, backend="numpy")
+    assert np.allclose(auto.throughput, ref.throughput, rtol=1e-9)
