@@ -27,7 +27,7 @@ from repro.core import (
     paper_cluster,
     round_robin_schedule,
     schedule,
-    simulate,
+    simulate_batch,
     star_topology,
     weighted_utilization,
     gain_ratio,
@@ -50,8 +50,16 @@ def run(scenario: str, topo_fn) -> dict:
     rr = round_robin_schedule(topo, cluster, sched.etg.n_instances)
     rate_o, thpt_o = max_stable_rate(sched.etg, cluster)
     rate_d, thpt_d = max_stable_rate(rr, cluster)
-    sim_o = simulate(sched.etg, cluster, rate_o)
-    sim_d = simulate(rr, cluster, rate_d)
+    # Both placements share the instance-count vector (§6.3 fair-comparison
+    # protocol), so they score in one batched sweep — each at its own stable
+    # rate via the per-row r0 vector; "auto" picks the JAX backend when the
+    # batch is big enough to amortize dispatch.
+    tm = np.stack([sched.etg.task_machine(), rr.task_machine()])
+    both = simulate_batch(
+        sched.etg, cluster, tm, np.array([rate_o, rate_d]), backend="auto"
+    )
+    sim_o = both.row(0)
+    sim_d = both.row(1)
     util_o = weighted_utilization(sched.etg, cluster, sim_o)
     util_d = weighted_utilization(rr, cluster, sim_d)
     return {

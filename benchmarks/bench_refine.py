@@ -1,0 +1,147 @@
+"""Refine/optimal engine perf baseline (``BENCH_refine.json``).
+
+The refine hill climb and the exhaustive optimal search both have two
+engines (see docs/architecture.md): the ``reference`` per-candidate
+copy-and-score paths, and the ``state`` engines that express moves as
+``ScheduleState`` deltas and score whole candidate sets through vectorized
+``max_stable_rate_batch`` sweeps. This benchmark times both on the slow
+test suite's scenario (the paper's 3-worker cluster, rate_epsilon=0.05
+schedules — ``test_refined_schedule_within_4pct_of_optimal``), verifies the
+engines return identical results, and records the speedups the repo
+regresses against (target: >= 10x on the refine scenario).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks.common import emit
+from repro.core import (
+    diamond_topology,
+    linear_topology,
+    optimal_schedule,
+    paper_cluster,
+    schedule,
+    star_topology,
+)
+from repro.core.refine import refine
+
+TOPOLOGIES = (linear_topology, diamond_topology, star_topology)
+SLOW_SUITE_CLUSTER = (1, 1, 1)
+
+
+def bench_refine_engines(skip_reference: bool = False) -> dict:
+    """Slow-suite refine scenario: reference vs state engine per topology."""
+    cluster = paper_cluster(SLOW_SUITE_CLUSTER)
+    per_topo = []
+    total_state = total_ref = 0.0
+    identical = True
+    for topo_fn in TOPOLOGIES:
+        topo = topo_fn()
+        etg = schedule(topo, cluster, r0=1.0, rate_epsilon=0.05).etg
+        refine(etg, cluster, engine="state")  # warm any lazy imports
+        t0 = time.perf_counter()
+        state = refine(etg, cluster, engine="state")
+        t_state = time.perf_counter() - t0
+        row = {
+            "topology": topo.name,
+            "tasks": int(etg.total_tasks),
+            "moves": len(state.moves),
+            "state_s": round(t_state, 4),
+        }
+        total_state += t_state
+        if not skip_reference:
+            t0 = time.perf_counter()
+            ref = refine(etg, cluster, engine="reference")
+            t_ref = time.perf_counter() - t0
+            total_ref += t_ref
+            row["reference_s"] = round(t_ref, 4)
+            row["speedup"] = round(t_ref / max(t_state, 1e-9), 1)
+            same = (
+                ref.moves == state.moves
+                and ref.rate == state.rate
+                and ref.throughput == state.throughput
+                and ref.etg.task_machine().tolist()
+                == state.etg.task_machine().tolist()
+            )
+            row["identical"] = bool(same)
+            identical = identical and same
+        per_topo.append(row)
+    out = {
+        "scenario": f"slow_suite_{'_'.join(map(str, SLOW_SUITE_CLUSTER))}",
+        "topologies": per_topo,
+        "state_total_s": round(total_state, 4),
+    }
+    if not skip_reference:
+        out["reference_total_s"] = round(total_ref, 4)
+        out["speedup"] = round(total_ref / max(total_state, 1e-9), 1)
+        out["identical"] = identical
+    return out
+
+
+def bench_optimal_engines(skip_reference: bool = False) -> dict:
+    """Exhaustive search: reference vs vectorized state engine."""
+    cluster = paper_cluster(SLOW_SUITE_CLUSTER)
+    topo = linear_topology()
+    max_total_tasks = 8
+    optimal_schedule(topo, cluster, max_total_tasks=max_total_tasks)  # warm
+    t0 = time.perf_counter()
+    state = optimal_schedule(
+        topo, cluster, max_total_tasks=max_total_tasks, engine="state"
+    )
+    t_state = time.perf_counter() - t0
+    out = {
+        "scenario": f"linear_mtt{max_total_tasks}",
+        "candidates": int(state.candidates_evaluated),
+        "state_s": round(t_state, 4),
+    }
+    if not skip_reference:
+        t0 = time.perf_counter()
+        ref = optimal_schedule(
+            topo, cluster, max_total_tasks=max_total_tasks, engine="reference"
+        )
+        t_ref = time.perf_counter() - t0
+        out["reference_s"] = round(t_ref, 4)
+        out["speedup"] = round(t_ref / max(t_state, 1e-9), 1)
+        out["identical"] = bool(
+            ref.throughput == state.throughput
+            and ref.candidates_evaluated == state.candidates_evaluated
+            and ref.etg.task_machine().tolist() == state.etg.task_machine().tolist()
+        )
+    return out
+
+
+def main(json_path: str | None = None, skip_reference: bool = False) -> None:
+    ref_bench = bench_refine_engines(skip_reference=skip_reference)
+    emit(
+        "refine_engines_slow_suite",
+        ref_bench["state_total_s"] * 1e6,
+        ";".join(
+            f"{k}={v}" for k, v in ref_bench.items()
+            if k not in ("topologies", "state_total_s")
+        ),
+    )
+    opt_bench = bench_optimal_engines(skip_reference=skip_reference)
+    emit(
+        "optimal_engines",
+        opt_bench["state_s"] * 1e6,
+        ";".join(f"{k}={v}" for k, v in opt_bench.items() if k != "state_s"),
+    )
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"refine": ref_bench, "optimal": opt_bench}, f, indent=2)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--json", default=None, help="write BENCH_refine.json here")
+    parser.add_argument(
+        "--skip-reference",
+        action="store_true",
+        help="skip the slow reference-engine timings (noisy CI runners)",
+    )
+    args = parser.parse_args()
+    main(json_path=args.json, skip_reference=args.skip_reference)

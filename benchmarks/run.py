@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig9   per-machine utilization comparison
   fig10  large-scale simulation scenarios + Table 4/5
   sec3   scheduler wall-time vs exhaustive optimal
+  refine refine/optimal engine baseline (writes BENCH_refine.json)
   planner beyond-paper heterogeneous LM fleet planning
   roofline dry-run roofline aggregation (requires dry-run artifacts)
 """
@@ -19,6 +20,7 @@ from benchmarks import (
     bench_largescale,
     bench_planner,
     bench_prediction,
+    bench_refine,
     bench_roofline,
     bench_sched_speed,
     bench_throughput,
@@ -34,6 +36,7 @@ def main() -> None:
     bench_utilization.main()
     bench_largescale.main()
     bench_sched_speed.main(json_path="BENCH_sched.json")
+    bench_refine.main(json_path="BENCH_refine.json")
     bench_planner.main()
     bench_roofline.main()
 

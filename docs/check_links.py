@@ -1,0 +1,53 @@
+"""Check internal markdown links in docs/ and README.md.
+
+Verifies that every relative link target (``[text](path)`` and
+``[text](path#anchor)``) resolves to an existing file. External
+(http/https/mailto) links are skipped; plain-text/inline-code path
+references in tables are not checked. Exits non-zero after collecting all
+failures.
+
+Usage: python docs/check_links.py  (from the repo root)
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    for link in LINK_RE.findall(md.read_text()):
+        if link.startswith(("http://", "https://", "mailto:")):
+            continue
+        target = link.split("#", 1)[0]
+        if not target:
+            continue  # pure anchor
+        resolved = (md.parent / target).resolve()
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link -> {link}")
+    return errors
+
+
+def main() -> int:
+    files = sorted(ROOT.glob("docs/*.md")) + [
+        ROOT / "README.md",
+        ROOT / "DESIGN.md",  # links-only pointer into docs/ — must not rot
+    ]
+    errors = []
+    for md in files:
+        if md.exists():
+            errors.extend(check_file(md))
+    for err in errors:
+        print(err)
+    print(f"checked {len(files)} files: {'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,33 @@
+"""Extract and execute the quickstart snippet from docs/api.md.
+
+Keeps the documented quickstart honest: CI (and the tier-1 docs test) runs
+exactly what the docs show. Requires PYTHONPATH=src.
+
+Usage: PYTHONPATH=src python docs/run_quickstart.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+
+def extract_snippet(md_path: Path) -> str:
+    text = md_path.read_text()
+    m = re.search(r"```python\n(.*?)```", text, flags=re.DOTALL)
+    if not m:
+        raise SystemExit(f"no ```python block found in {md_path}")
+    return m.group(1)
+
+
+def main() -> int:
+    snippet = extract_snippet(Path(__file__).resolve().parent / "api.md")
+    code = compile(snippet, "docs/api.md#quickstart", "exec")
+    exec(code, {"__name__": "__docs_quickstart__"})
+    print("quickstart snippet: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,7 +5,8 @@ Public API:
   profiling:   Profile, Cluster, paper_profile, paper_cluster
   prediction:  predict (eq. 5/6)
   simulator:   simulate, simulate_batch, measured_tcu (§6.3 ground truth)
-  schedulers:  schedule (Alg. 1+2), round_robin_schedule, optimal_schedule
+  schedulers:  schedule (Alg. 1+2), round_robin_schedule, optimal_schedule,
+               refine (beyond-paper hill climb)
   metrics:     weighted_utilization, prediction_accuracy, gain_ratio
 """
 
@@ -31,6 +32,7 @@ from repro.core.maximize_throughput import Schedule, maximize_throughput, schedu
 from repro.core.metrics import gain_ratio, prediction_accuracy, weighted_utilization
 from repro.core.optimal import OptimalResult, optimal_schedule, placement_score
 from repro.core.profiles import Cluster, Profile, paper_cluster, paper_profile
+from repro.core.refine import RefineResult, refine
 from repro.core.round_robin import round_robin_schedule
 from repro.core.schedule_state import ScheduleState
 from repro.core.simulator import SimResult, measured_tcu, simulate, simulate_batch
@@ -58,6 +60,8 @@ __all__ = [
     "OptimalResult",
     "optimal_schedule",
     "placement_score",
+    "RefineResult",
+    "refine",
     "max_stable_rate",
     "max_stable_rate_batch",
     "Cluster",

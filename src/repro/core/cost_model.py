@@ -30,6 +30,7 @@ __all__ = [
     "instance_rates",
     "Prediction",
     "predict",
+    "closed_form_rates",
     "max_stable_rate",
     "max_stable_rate_batch",
 ]
@@ -132,27 +133,58 @@ def max_stable_rate(etg: ExecutionGraph, cluster: Cluster) -> tuple[float, float
 
 
 def max_stable_rate_batch(
-    etg: ExecutionGraph, cluster: Cluster, task_machine: np.ndarray
+    etg: ExecutionGraph,
+    cluster: Cluster,
+    task_machine: np.ndarray,
+    backend: str = "numpy",
 ) -> tuple[np.ndarray, np.ndarray]:
     """Vectorized ``max_stable_rate`` over B placements (same instance counts).
 
     Args:
       task_machine: (B, T) machine index per task per candidate placement.
+      backend: ``"numpy"`` (default; the reference floats — the refine and
+        optimal engines' equivalence guarantees rely on it) or ``"jax"``
+        (jitted float64 closed form, ~1e-15 relative agreement; falls back
+        to NumPy when JAX is unavailable — worthwhile for very large B).
 
     Returns:
       (rates, throughputs), each (B,).
     """
+    from repro.core.simulator import resolve_closed_form_backend
+
+    if resolve_closed_form_backend(backend) == "jax":
+        from repro.core.sim_jax import max_stable_rate_batch_jax
+
+        return max_stable_rate_batch_jax(etg, cluster, task_machine)
     comp = etg.task_component()
     task_types = etg.utg.component_types[comp]
     unit_ir = instance_rates(etg, 1.0)                 # (T,) IR per unit R
     task_machine = np.asarray(task_machine, dtype=np.int64)
-    B, T = task_machine.shape
-    m = cluster.n_machines
 
     mtypes = cluster.machine_types[task_machine]       # (B, T)
     e = cluster.profile.e[task_types[None, :], mtypes]
     met = cluster.profile.met[task_types[None, :], mtypes]
+    return closed_form_rates(task_machine, e, met, unit_ir, cluster.capacity)
 
+
+def closed_form_rates(
+    task_machine: np.ndarray,
+    e: np.ndarray,
+    met: np.ndarray,
+    unit_ir: np.ndarray,
+    capacity: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Shared closed-form scoring core (the single NumPy copy of the math).
+
+    Given per-task (B, T) profile gathers, accumulate per-machine fixed and
+    variable loads in task order and solve ``R* = min_w (cap_w - met_w) /
+    var_w``. Both ``max_stable_rate_batch`` and
+    ``ScheduleState.score_task_machine_batch`` call this — the engines'
+    bit-identical-scoring contract rests on there being exactly one copy
+    (``sim_jax._msr_kernel`` mirrors it in JAX, ~1e-15 agreement).
+    """
+    B, T = task_machine.shape
+    m = capacity.shape[0]
     rows = np.repeat(np.arange(B), T)
     cols = task_machine.reshape(-1)
     var_w = np.zeros((B, m), dtype=np.float64)
@@ -160,11 +192,12 @@ def max_stable_rate_batch(
     np.add.at(var_w, (rows, cols), (e * unit_ir[None, :]).reshape(-1))
     np.add.at(met_w, (rows, cols), met.reshape(-1))
 
-    head = cluster.capacity[None, :] - met_w           # (B, m)
+    head = capacity[None, :] - met_w                   # (B, m)
     infeasible = np.any(head < 0.0, axis=1)
-    with np.errstate(divide="ignore"):
+    # over="ignore": a zero-var machine with capacity-scale head can hit
+    # head/1e-300 -> inf; np.where discards it, so silence the warning.
+    with np.errstate(divide="ignore", over="ignore"):
         limits = np.where(var_w > 0.0, head / np.maximum(var_w, 1e-300), np.inf)
     rates = np.min(limits, axis=1)
     rates = np.where(infeasible, 0.0, np.clip(rates, 0.0, None))
-    thpt = rates * unit_ir.sum()
-    return rates, thpt
+    return rates, rates * unit_ir.sum()

@@ -100,7 +100,8 @@ def _grow_component(
     capacity once the component's stream is re-split (eq. 6). The usual case
     adds exactly one instance.
 
-    Generalization (documented in DESIGN.md §Arch-applicability notes): on
+    Generalization (documented in docs/architecture.md §Multi-instance
+    growth generalization): on
     large heterogeneous clusters a *single* extra instance can still carry a
     chunk (``CIR/(N+1)``) too big for any machine with remaining capacity —
     e.g. slow machine types need chunks several times smaller than the fast

@@ -3,7 +3,7 @@
 The paper's brute-force baseline enumerates every (instance-count vector,
 placement) combination, evaluates the overall throughput of each, and keeps
 the best. The paper reports ~18 hours for 27 405 possibilities on a 4-socket
-Xeon server; our beyond-paper speedup comes from three observations:
+Xeon server; our beyond-paper speedup comes from four observations:
 
 1. Instances of one component are interchangeable, so a placement is fully
    described by *how many* instances of each component land on each machine —
@@ -19,13 +19,27 @@ Xeon server; our beyond-paper speedup comes from three observations:
    canonical representative per within-type permutation class needs
    scoring (``prune_symmetry``) — the rest are duplicates by symmetry.
 
-See benchmarks/bench_sched_speed.py for the resulting wall-time comparison.
+Engines
+-------
+``engine="state"`` (default) enumerates each composition class as a dense
+(B, n, m) count tensor — product indices, the canonical-symmetry filter and
+the per-machine cap run as chunked NumPy array ops, and the counts convert
+to (B, T) task->machine rows in one cumsum trick — so the only remaining
+per-candidate Python is none at all. ``engine="reference"`` keeps the
+original per-candidate ``itertools.product`` loop as the semantic
+reference. Both score through the same ``max_stable_rate_batch`` rows and
+select winners with identical first-strict-max semantics, so they return
+identical results (asserted in ``tests/test_sched_equivalence.py``).
+
+See benchmarks/bench_sched_speed.py and benchmarks/bench_refine.py for the
+resulting wall-time comparisons, and docs/architecture.md for the design.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 from typing import Iterator, Sequence
 
 import numpy as np
@@ -98,6 +112,43 @@ def _is_canonical(combo: tuple[tuple[int, ...], ...], runs: list[tuple[int, int]
     return True
 
 
+def _canonical_mask(
+    counts: np.ndarray, runs: list[tuple[int, int]]
+) -> np.ndarray:
+    """Vectorized ``_is_canonical`` over a (B, n, m) count tensor.
+
+    A chain is non-increasing iff every adjacent column pair is; a column
+    pair violates iff the first component where they differ increases.
+    """
+    B = counts.shape[0]
+    keep = np.ones(B, dtype=bool)
+    for start, end in runs:
+        for w in range(start + 1, end):
+            diff = counts[:, :, w] - counts[:, :, w - 1]     # (B, n)
+            nz = diff != 0
+            has = nz.any(axis=1)
+            first = np.argmax(nz, axis=1)
+            sign = diff[np.arange(B), first]
+            keep &= ~(has & (sign > 0))
+    return keep
+
+
+def _counts_to_task_machine(counts: np.ndarray, n_inst: np.ndarray) -> np.ndarray:
+    """(B, n, m) per-machine counts -> (B, T) flat machine rows (eq. 3 order).
+
+    Per component, task j of the block lands on the number of machines whose
+    cumulative count is <= j — a vectorized run-length decode that matches
+    ``_counts_to_assignment``'s machine-major expansion exactly.
+    """
+    blocks = []
+    for c in range(n_inst.shape[0]):
+        k = int(n_inst[c])
+        cums = counts[:, c, :].cumsum(axis=1)                # (B, m)
+        j = np.arange(k)
+        blocks.append((cums[:, None, :] <= j[None, :, None]).sum(axis=2))
+    return np.concatenate(blocks, axis=1).astype(np.int64)
+
+
 @dataclasses.dataclass(frozen=True)
 class OptimalResult:
     etg: ExecutionGraph
@@ -113,6 +164,8 @@ def optimal_schedule(
     max_per_machine: int | None = None,
     batch_size: int = 8192,
     prune_symmetry: bool = True,
+    engine: str = "state",
+    backend: str = "numpy",
 ) -> OptimalResult:
     """Exhaustive search. Exponential — only for small benchmark topologies.
 
@@ -130,7 +183,19 @@ def optimal_schedule(
         (roughly by ``prod_types c_t!`` on spread-out placements). The
         winning canonical placement *is* a concrete placement; disabling
         this re-enumerates every symmetric duplicate (for tests/audits).
+      engine: ``"state"`` (vectorized enumeration + filters, default) or
+        ``"reference"`` (original per-candidate loop). Identical results.
+      backend: closed-form scoring backend forwarded to
+        ``max_stable_rate_batch`` — ``"numpy"`` (default; the reference
+        floats) or ``"jax"`` (jitted float64, ~1e-15 agreement).
     """
+    if engine == "state":
+        return _optimal_state(
+            utg, cluster, max_total_tasks, max_per_machine, batch_size,
+            prune_symmetry, backend,
+        )
+    if engine != "reference":
+        raise ValueError(f"unknown engine {engine!r}; use 'state' or 'reference'")
     n = utg.n_components
     m = cluster.n_machines
     runs = _symmetry_runs(cluster) if prune_symmetry else []
@@ -155,7 +220,7 @@ def optimal_schedule(
             if not flat_batch:
                 return
             tm = np.stack(flat_batch, axis=0)
-            _, thpt = max_stable_rate_batch(template, cluster, tm)
+            _, thpt = max_stable_rate_batch(template, cluster, tm, backend=backend)
             evaluated += tm.shape[0]
             top = int(np.argmax(thpt))
             if float(thpt[top]) > best_thpt:
@@ -181,6 +246,86 @@ def optimal_schedule(
             if len(flat_batch) >= batch_size:
                 flush()
         flush()
+
+    if best_etg is None:
+        raise ValueError("design space empty — raise max_total_tasks")
+    rate, thpt = max_stable_rate(best_etg, cluster)
+    return OptimalResult(
+        etg=best_etg,
+        rate=float(rate),
+        throughput=float(thpt),
+        candidates_evaluated=evaluated,
+    )
+
+
+def _optimal_state(
+    utg: UserGraph,
+    cluster: Cluster,
+    max_total_tasks: int,
+    max_per_machine: int | None,
+    batch_size: int,
+    prune_symmetry: bool,
+    backend: str,
+) -> OptimalResult:
+    """Vectorized engine: dense count tensors per composition class.
+
+    For each instance-count vector, candidate placements are rows of the
+    cross product of per-component composition tables. Chunks of product
+    indices unravel (C order — the same order ``itertools.product`` walks)
+    into (B, n, m) count tensors; the canonical filter and per-machine cap
+    are boolean masks; survivors convert to (B, T) rows and score in one
+    ``max_stable_rate_batch`` sweep per chunk. Scores are row-independent
+    and winners are first strict maxima, so chunk boundaries cannot change
+    the result and the returned placement, score and
+    ``candidates_evaluated`` match the reference engine exactly.
+    """
+    n = utg.n_components
+    m = cluster.n_machines
+    runs = _symmetry_runs(cluster) if prune_symmetry else []
+    best_etg: ExecutionGraph | None = None
+    best_thpt = -1.0
+    evaluated = 0
+
+    for extra in _compositions_upto(max_total_tasks - n, n):
+        n_inst = np.asarray(extra, dtype=np.int64) + 1
+        template = ExecutionGraph(
+            utg=utg,
+            n_instances=n_inst,
+            assignment=[np.zeros(int(k), dtype=np.int64) for k in n_inst],
+        )
+        opts = [
+            np.asarray(list(_compositions(int(k), m)), dtype=np.int64)
+            for k in n_inst
+        ]
+        sizes = [o.shape[0] for o in opts]
+        total = math.prod(sizes)  # Python int: exact for huge spaces
+        for start in range(0, total, batch_size):
+            idx = np.arange(start, min(start + batch_size, total))
+            sel = np.unravel_index(idx, sizes)
+            counts = np.stack(
+                [opts[c][sel[c]] for c in range(n)], axis=1
+            )  # (B, n, m)
+            keep = np.ones(idx.size, dtype=bool)
+            if runs:
+                keep &= _canonical_mask(counts, runs)
+            if max_per_machine is not None:
+                keep &= (counts.sum(axis=1) <= max_per_machine).all(axis=1)
+            counts = counts[keep]
+            if counts.shape[0] == 0:
+                continue
+            tm = _counts_to_task_machine(counts, n_inst)
+            _, thpt = max_stable_rate_batch(template, cluster, tm, backend=backend)
+            evaluated += tm.shape[0]
+            top = int(np.argmax(thpt))
+            if float(thpt[top]) > best_thpt:
+                best_thpt = float(thpt[top])
+                assignment, off = [], 0
+                for k in n_inst:
+                    assignment.append(tm[top, off : off + int(k)].copy())
+                    off += int(k)
+                best_etg = ExecutionGraph(
+                    utg=utg, n_instances=n_inst.copy(), assignment=assignment
+                )
 
     if best_etg is None:
         raise ValueError("design space empty — raise max_total_tasks")

@@ -3,24 +3,38 @@
 The paper's Algorithm 2 only ever *adds* instances; it can never rebalance
 earlier placement decisions, so on profiles where task "chunks" pack
 awkwardly it terminates at a local optimum measurably below the exhaustive
-optimum. This pass closes that gap with a hill climb over three move types,
-each scored by the closed-form maximum stable throughput
-(``cost_model.max_stable_rate`` — O(T) per candidate, no simulation):
+optimum. This pass closes that gap with a hill climb over these move types,
+each scored by the closed-form maximum stable throughput (paper eq. 5/6 are
+linear in the topology input rate, so no simulation is needed):
 
 * RELOCATE — move one instance to a different machine;
 * SWAP     — exchange the machines of two instances of different components;
 * ADD      — grow one component by one instance on some machine;
+* GROW     — grow one component by k instances at once, placed greedily;
+* PAIRGROW — grow two components together (crosses eq. 6 re-split valleys);
 * DROP     — remove an instance of a component with >= 2 instances (undoes
              over-provisioning that only burns MET overhead).
 
 The climb applies the single best improving move until no move improves
 throughput by more than ``tol`` (first-improvement would also work; best-
-improvement keeps the trace short and deterministic). Complexity per round
-is O(T·m + T²) stable-rate evaluations, each O(T) — trivially fast for
-benchmark-scale graphs and still fast for the large-scale scenarios.
+improvement keeps the trace short and deterministic).
+
+Engines
+-------
+``engine="state"`` (default) runs the climb on the incremental
+``ScheduleState`` engine: moves are O(m) count-matrix deltas with
+snapshot/restore rollback (no ``ExecutionGraph`` copies), and each round's
+candidate set is scored through vectorized ``max_stable_rate_batch`` calls
+— candidate placements are exported as (B, T) task->machine matrices, so
+every candidate's score is bit-identical to the reference path's scalar
+``max_stable_rate`` and the two engines provably choose the same moves.
+``engine="reference"`` keeps the original copy-and-score implementation as
+the semantic reference for the golden equivalence tests
+(``tests/test_sched_equivalence.py``).
 
 This module is *not* part of the faithful reproduction; benchmarks report
-"proposed" (faithful Alg. 1+2) and "proposed+refine" separately.
+"proposed" (faithful Alg. 1+2) and "proposed+refine" separately. See
+docs/architecture.md for the engine design and docs/api.md for usage.
 """
 
 from __future__ import annotations
@@ -32,8 +46,13 @@ import numpy as np
 from repro.core.cost_model import max_stable_rate
 from repro.core.graph import ExecutionGraph
 from repro.core.profiles import Cluster
+from repro.core.schedule_state import ScheduleState
 
 __all__ = ["RefineResult", "refine"]
+
+# Candidate rows scored per vectorized sweep; bounds the (chunk, T) batch
+# memory on large clusters without changing results (rows are independent).
+_SCORE_CHUNK = 16_384
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,7 +73,46 @@ def refine(
     max_rounds: int = 200,
     tol: float = 1e-9,
     allow_add: bool = True,
+    engine: str = "state",
+    backend: str = "numpy",
 ) -> RefineResult:
+    """Hill-climb refinement of ``etg``'s placement (and instance counts).
+
+    Args:
+      etg: schedule to refine (not mutated).
+      cluster: the heterogeneous cluster.
+      max_rounds: maximum number of applied moves.
+      tol: minimum throughput improvement for a move to be applied.
+      allow_add: when False, only count-preserving moves (RELOCATE/SWAP)
+        are considered.
+      engine: ``"state"`` (incremental ScheduleState deltas + batched
+        scoring, default) or ``"reference"`` (original per-candidate
+        copy-and-score path). Both produce identical results.
+      backend: scoring backend for the state engine's batched closed-form
+        evaluator — ``"numpy"`` (default; bit-identical to the reference)
+        or ``"jax"`` (jitted float64, ~1e-15 relative agreement; worthwhile
+        only for very large candidate batches). Ignored by the reference
+        engine.
+    """
+    if engine == "state":
+        return _refine_state(etg, cluster, max_rounds, tol, allow_add, backend)
+    if engine != "reference":
+        raise ValueError(f"unknown engine {engine!r}; use 'state' or 'reference'")
+    return _refine_reference(etg, cluster, max_rounds, tol, allow_add)
+
+
+# --------------------------------------------------------------- reference
+
+
+def _refine_reference(
+    etg: ExecutionGraph,
+    cluster: Cluster,
+    max_rounds: int,
+    tol: float,
+    allow_add: bool,
+) -> RefineResult:
+    """Original implementation: one ``ExecutionGraph`` copy + scalar
+    ``max_stable_rate`` per candidate move. O(T·m + T²) copies per round."""
     current = etg.copy()
     best = _score(current, cluster)
     moves: list[str] = []
@@ -152,3 +210,265 @@ def refine(
 
     rate, thpt = max_stable_rate(current, cluster)
     return RefineResult(etg=current, rate=rate, throughput=thpt, moves=moves)
+
+
+# ------------------------------------------------------------ state engine
+
+
+class _GrowCursor:
+    """Flat task->machine row + block offsets threaded through a greedy
+    growth chain, so each step avoids rebuilding them from the state."""
+
+    __slots__ = ("row", "offsets")
+
+    def __init__(self, row: np.ndarray, offsets: np.ndarray):
+        self.row = row
+        self.offsets = offsets
+
+    def copy(self) -> "_GrowCursor":
+        # Steps rebind (never mutate) row/offsets, so a shallow copy is a
+        # valid fork point.
+        return _GrowCursor(self.row, self.offsets)
+
+
+def _grow_step(
+    state: ScheduleState, c: int, backend: str, cur: _GrowCursor
+) -> tuple[float, int]:
+    """One greedy growth step: score adding an instance of ``c`` on every
+    machine (one batched sweep), apply the winner to ``state`` and ``cur``.
+
+    Matches the reference ``greedy_grow`` inner loop exactly: strict-``>``
+    first-max over machines in index order is ``np.argmax`` on the batch.
+    """
+    m = state.cluster.n_machines
+    row, offsets = cur.row, cur.offsets
+    pos = int(offsets[c + 1])  # append at end of c's block
+    T = row.shape[0]
+    tm = np.empty((m, T + 1), dtype=np.int64)
+    tm[:, :pos] = row[:pos]
+    tm[:, pos] = np.arange(m)
+    tm[:, pos + 1 :] = row[pos:]
+    n_new = state.n_instances.copy()
+    n_new[c] += 1
+    _, scores = state.score_task_machine_batch(tm, n_new, backend=backend)
+    w = int(np.argmax(scores))
+    state.add_instance(c, w)
+    cur.row = tm[w]
+    new_off = offsets.copy()
+    new_off[c + 1 :] += 1
+    cur.offsets = new_off
+    return float(scores[w]), w
+
+
+def _refine_state(
+    etg: ExecutionGraph,
+    cluster: Cluster,
+    max_rounds: int,
+    tol: float,
+    allow_add: bool,
+    backend: str,
+) -> RefineResult:
+    """Incremental-engine hill climb: identical decisions, batched scoring.
+
+    Per round, every move family is expressed as edits on the flattened
+    (T,) task->machine row exported from ``ScheduleState`` and scored in
+    vectorized ``max_stable_rate_batch`` sweeps — one sweep covers all
+    RELOCATE+SWAP candidates, one per component covers ADD (and DROP), and
+    each greedy growth step is one m-row sweep. Candidate scores are
+    bit-identical to the reference engine's scalar scoring (same
+    ``max_stable_rate_batch`` row computation), and winners are selected
+    with the same strict-``>`` first-max semantics in the same enumeration
+    order, so both engines apply the same move sequence. Applying a move is
+    an O(m) ``ScheduleState`` delta; greedy growth exploration rolls back
+    via snapshot/restore instead of copying graphs.
+    """
+    state = ScheduleState.from_etg(etg, cluster)
+    best = _score(state.to_etg(), cluster)
+    moves: list[str] = []
+    m = cluster.n_machines
+    n = state.utg.n_components
+
+    for _ in range(max_rounds):
+        best_move: tuple[float, str, "function"] | None = None
+
+        def offer(score: float, desc: str, apply_fn) -> None:
+            nonlocal best_move
+            if score > best + tol and (best_move is None or score > best_move[0]):
+                best_move = (score, desc, apply_fn)
+
+        base_tm = state.task_machine()
+        offsets = state.component_offsets()
+        T = int(base_tm.shape[0])
+        # Copy: growth exploration below mutates state.n_instances in place
+        # before snapshot/restore swaps in a fresh array.
+        n_inst = state.n_instances.copy()
+        comp_of = np.repeat(np.arange(n), n_inst)
+
+        # RELOCATE + SWAP share the template (counts unchanged): candidates
+        # are 1-2 column edits on the base row, scored in one sweep. Within
+        # the concatenated [relocate..., swap...] order, np.argmax is the
+        # reference's first strictly-greater winner.
+        W = np.tile(np.arange(m), (T, 1))
+        keep = (W != base_tm[:, None]).ravel()
+        reloc_pos = np.repeat(np.arange(T), m)[keep]
+        reloc_w = W.ravel()[keep]
+        a_idx, b_idx = np.triu_indices(T, 1)
+        pair_ok = (comp_of[a_idx] != comp_of[b_idx]) & (
+            base_tm[a_idx] != base_tm[b_idx]
+        )
+        swap_a, swap_b = a_idx[pair_ok], b_idx[pair_ok]
+        b1, b2 = reloc_pos.size, swap_a.size
+        # Each candidate = two column writes (a relocate writes one column
+        # twice), so construction chunks alongside scoring.
+        pos_a = np.concatenate([reloc_pos, swap_a])
+        val_a = np.concatenate([reloc_w, base_tm[swap_b]])
+        pos_b = np.concatenate([reloc_pos, swap_b])
+        val_b = np.concatenate([reloc_w, base_tm[swap_a]])
+        scores = np.empty(b1 + b2, dtype=np.float64)
+        for start in range(0, b1 + b2, _SCORE_CHUNK):
+            stop = min(start + _SCORE_CHUNK, b1 + b2)
+            tm = np.tile(base_tm, (stop - start, 1))
+            rows = np.arange(stop - start)
+            tm[rows, pos_a[start:stop]] = val_a[start:stop]
+            tm[rows, pos_b[start:stop]] = val_b[start:stop]
+            scores[start:stop] = state.score_task_machine_batch(
+                tm, n_inst, backend=backend
+            )[1]
+        if b1 + b2:
+            i = int(np.argmax(scores))
+            s = float(scores[i])
+            if i < b1:
+                p, w = int(reloc_pos[i]), int(reloc_w[i])
+                c = int(comp_of[p])
+                k, src = p - int(offsets[c]), int(base_tm[p])
+                offer(
+                    s,
+                    f"relocate c{c}#{k} m{src}->m{w}",
+                    lambda c=c, k=k, w=w: state.relocate_instance(c, k, w),
+                )
+            else:
+                pa, pb = int(swap_a[i - b1]), int(swap_b[i - b1])
+                ca, cb = int(comp_of[pa]), int(comp_of[pb])
+                ka, kb = pa - int(offsets[ca]), pb - int(offsets[cb])
+                offer(
+                    s,
+                    f"swap c{ca}#{ka}<->c{cb}#{kb}",
+                    lambda ca=ca, ka=ka, cb=cb, kb=kb: state.swap_instances(
+                        ca, ka, cb, kb
+                    ),
+                )
+
+        if allow_add:
+            def apply_adds(placements):
+                for c, w in placements:
+                    state.add_instance(c, w)
+
+            # Greedy growth is deterministic, so the reference's independent
+            # greedy_grow re-runs traverse shared prefixes: one 4-step chain
+            # per component yields the ADD candidate (step 1) and the
+            # GROW k=2/3/4 candidates (steps 2-4); PAIRGROW reuses the first
+            # one or two steps of the first component's chain. Chains are
+            # explored on the live state with snapshot/restore rollback.
+            # Offers still follow the reference enumeration order
+            # (ADD..., GROW..., PAIRGROW..., DROP...), which matters for
+            # exact-tie breaking under the strict-> first-max rule.
+            chains: list[
+                tuple[dict[int, float], list[tuple[int, int]], dict[int, _GrowCursor]]
+            ] = []
+            for c in range(n):
+                snap = state.snapshot()
+                cur = _GrowCursor(base_tm, offsets)
+                chain: list[tuple[int, int]] = []
+                chain_scores: dict[int, float] = {}
+                forks: dict[int, _GrowCursor] = {}
+                for step in range(1, 5):
+                    sc, w = _grow_step(state, c, backend, cur)
+                    chain.append((c, w))
+                    chain_scores[step] = sc
+                    if step <= 2:
+                        forks[step] = cur.copy()
+                state.restore(snap)
+                chains.append((chain_scores, chain, forks))
+            # ADD: the reference's first-max over machines is exactly the
+            # chain's first greedy step (same scores, same argmax).
+            for c in range(n):
+                chain_scores, chain, _ = chains[c]
+                offer(
+                    chain_scores[1],
+                    f"add c{c}->m{chain[0][1]}",
+                    lambda p=chain[:1]: apply_adds(p),
+                )
+            # GROW: k instances of one component at once — the eq. 6
+            # re-split means gains often appear only at specific counts,
+            # invisible to single adds.
+            for c in range(n):
+                chain_scores, chain, _ = chains[c]
+                for k in (2, 3, 4):
+                    offer(
+                        chain_scores[k],
+                        f"grow c{c}x{k}",
+                        lambda p=chain[:k]: apply_adds(p),
+                    )
+            # PAIRGROW: components often need to grow *together* — the
+            # eq. 6 re-split creates valleys between (x, y) and
+            # (x+a, y+b) that per-component moves cannot cross.
+            for ci in range(n):
+                for cj in range(ci + 1, n):
+                    snap0 = state.snapshot()
+                    _, ci_chain, forks = chains[ci]
+                    apply_adds(ci_chain[:1])               # [ci] (shared prefix)
+                    cur = forks[1].copy()
+                    snap1 = state.snapshot()
+                    sc11, w = _grow_step(state, cj, backend, cur)
+                    p11 = ci_chain[:1] + [(cj, w)]
+                    sc12, w = _grow_step(state, cj, backend, cur)
+                    p12 = p11 + [(cj, w)]
+                    state.restore(snap1)
+                    apply_adds(ci_chain[1:2])              # [ci, ci]
+                    cur = forks[2].copy()
+                    sc21, w = _grow_step(state, cj, backend, cur)
+                    p21 = ci_chain[:2] + [(cj, w)]
+                    sc22, w = _grow_step(state, cj, backend, cur)
+                    p22 = p21 + [(cj, w)]
+                    state.restore(snap0)
+                    for (a, b), (sc_ab, p_ab) in (
+                        ((1, 1), (sc11, p11)),
+                        ((2, 1), (sc21, p21)),
+                        ((1, 2), (sc12, p12)),
+                        ((2, 2), (sc22, p22)),
+                    ):
+                        offer(
+                            sc_ab,
+                            f"pairgrow c{ci}x{a}+c{cj}x{b}",
+                            lambda p=p_ab: apply_adds(p),
+                        )
+            # DROP: per component with >= 2 instances, one sweep over which
+            # instance to delete (column removal on the base row).
+            for c in range(n):
+                nk = int(n_inst[c])
+                if nk < 2:
+                    continue
+                cols = np.arange(T - 1)
+                idx = cols[None, :] + (
+                    cols[None, :] >= (int(offsets[c]) + np.arange(nk))[:, None]
+                )
+                tmd = base_tm[idx]
+                n_new = n_inst.copy()
+                n_new[c] -= 1
+                _, sd = state.score_task_machine_batch(tmd, n_new, backend=backend)
+                k = int(np.argmax(sd))
+                offer(
+                    float(sd[k]),
+                    f"drop c{c}#{k}",
+                    lambda c=c, k=k: state.drop_instance(c, k),
+                )
+
+        if best_move is None:
+            break
+        best, desc, apply_fn = best_move
+        apply_fn()
+        moves.append(desc)
+
+    final = state.to_etg()
+    rate, thpt = max_stable_rate(final, cluster)
+    return RefineResult(etg=final, rate=rate, throughput=thpt, moves=moves)

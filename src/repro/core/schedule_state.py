@@ -8,8 +8,8 @@ attempt for *every* candidate target count — on the paper's large scenario
 (20/70/90 machines, 478 tasks) that is ~600k O(m) numpy calls and ~25 s of
 wall clock for 46 algorithm iterations.
 
-This module rebuilds the hot path around three observations (see DESIGN.md
-§Arch-applicability notes for the full derivation):
+This module rebuilds the hot path around three observations (see
+docs/architecture.md for the full derivation):
 
 1. **Flat structure-of-arrays state.** Instances of one component on one
    machine are indistinguishable, so the whole schedule collapses to an
@@ -174,6 +174,127 @@ class ScheduleState:
         self.assignment[component].append(int(machine))
         self._met_load = None
         self._var_load = None
+
+    def relocate_instance(self, component: int, k: int, machine: int) -> None:
+        """O(1) delta: move instance (component, k) to ``machine``.
+
+        Instance counts are unchanged, so the per-instance split (eq. 6) is
+        untouched — only two entries of the count matrix move.
+        """
+        src = self.assignment[component][k]
+        self.comp_counts[component, src] -= 1
+        self.comp_counts[component, machine] += 1
+        self.assignment[component][k] = int(machine)
+        self._met_load = None
+        self._var_load = None
+
+    def swap_instances(self, ca: int, ka: int, cb: int, kb: int) -> None:
+        """O(1) delta: exchange the machines of instances (ca, ka) and (cb, kb)."""
+        wa = self.assignment[ca][ka]
+        wb = self.assignment[cb][kb]
+        self.relocate_instance(ca, ka, wb)
+        self.relocate_instance(cb, kb, wa)
+
+    def drop_instance(self, component: int, k: int) -> None:
+        """O(m) delta: remove instance (component, k); the component's stream
+        re-splits over the remaining instances (eq. 6)."""
+        if int(self.n_instances[component]) < 2:
+            raise ValueError("every component needs >= 1 instance (paper constraint)")
+        w = self.assignment[component].pop(k)
+        self.comp_counts[component, w] -= 1
+        self.n_instances[component] -= 1
+        self._met_load = None
+        self._var_load = None
+
+    # ------------------------------------------------------ batch export
+
+    def task_machine(self) -> np.ndarray:
+        """(T,) flattened machine per task (paper eq. 3 order), for use as the
+        base row when building candidate batches for ``max_stable_rate_batch``."""
+        flat: list[int] = []
+        for machines in self.assignment:
+            flat.extend(machines)
+        return np.asarray(flat, dtype=np.int64)
+
+    def component_offsets(self) -> np.ndarray:
+        """(n+1,) start offset of each component's block in the flattened
+        task order; ``offsets[c] + k`` is the column of instance (c, k)."""
+        return np.concatenate(
+            [np.zeros(1, dtype=np.int64), np.cumsum(self.n_instances)]
+        )
+
+    def template_etg(self, n_instances: np.ndarray | None = None) -> ExecutionGraph:
+        """Shape-only ETG for batched scoring (assignment is a placeholder).
+
+        ``max_stable_rate_batch`` reads only the UTG and instance counts from
+        its template — candidate placements come in as (B, T) rows — so the
+        export is O(n), no deep copy of the real assignment.
+        """
+        if n_instances is None:
+            n_instances = self.n_instances
+        n_instances = np.asarray(n_instances, dtype=np.int64)
+        return ExecutionGraph(
+            utg=self.utg,
+            n_instances=n_instances.copy(),
+            assignment=[np.zeros(int(k), dtype=np.int64) for k in n_instances],
+        )
+
+    def score_task_machine_batch(
+        self,
+        task_machine: np.ndarray,
+        n_instances: np.ndarray | None = None,
+        backend: str = "numpy",
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Closed-form (rate, throughput) of B exported candidate placements.
+
+        Bit-identical to ``cost_model.max_stable_rate_batch`` on a template
+        with the same instance counts — both call the one shared
+        ``closed_form_rates`` core with identical per-task gathers — but
+        skips per-call ``ExecutionGraph`` construction and the Python eq. 6
+        walk by reusing the cached ``e_cm``/``met_cm``/``cir_unit`` slices.
+        This is the scoring entry point behind the refine/optimal batch
+        engines.
+
+        Args:
+          task_machine: (B, T') candidate rows, T' = sum(n_instances).
+          n_instances: per-component counts for the candidates (defaults to
+            the current state's counts; pass a modified vector for
+            ADD/DROP/GROW-style candidates).
+          backend: ``"numpy"`` (reference floats) or ``"jax"`` (jitted
+            float64 closed form, ~1e-15 relative agreement; falls back to
+            NumPy when JAX is unavailable).
+        """
+        n_inst = self.n_instances if n_instances is None else n_instances
+        n = self.utg.n_components
+        comp = np.repeat(np.arange(n), n_inst)
+        # Per-component division then gather: per-element operands match
+        # instance_rates()' per-task division exactly, so floats agree.
+        unit_ir = (self.cir_unit / n_inst)[comp]
+        task_machine = np.asarray(task_machine, dtype=np.int64)
+        if task_machine.ndim != 2 or task_machine.shape[1] != comp.shape[0]:
+            raise ValueError("task_machine must be (B, sum(n_instances))")
+        from repro.core.simulator import resolve_closed_form_backend
+
+        if resolve_closed_form_backend(backend) == "jax":
+            from jax.experimental import enable_x64
+
+            from repro.core.sim_jax import _msr_kernel
+
+            with enable_x64():
+                rates, thpt = _msr_kernel()(
+                    task_machine,
+                    comp,
+                    unit_ir,
+                    self.e_cm,
+                    self.met_cm,
+                    self.cluster.capacity,
+                )
+            return np.asarray(rates), np.asarray(thpt)
+        e = self.e_cm[comp[None, :], task_machine]        # (B, T)
+        met = self.met_cm[comp[None, :], task_machine]
+        return cost_model.closed_form_rates(
+            task_machine, e, met, unit_ir, self.cluster.capacity
+        )
 
     def snapshot(self) -> tuple:
         return (

@@ -27,7 +27,7 @@ import numpy as np
 from repro.core.graph import ExecutionGraph
 from repro.core.profiles import Cluster
 
-__all__ = ["simulate_batch_jax"]
+__all__ = ["simulate_batch_jax", "max_stable_rate_batch_jax"]
 
 _MAX_ITERS = 200
 _TOL = 1e-10
@@ -50,6 +50,10 @@ def _compiled_kernel(static: tuple):
     @jax.jit
     def kernel(task_machine, comp, n_inst, e_cm, met_cm, capacity, r0):
         """Fixed point over machine scale factors s (B, m).
+
+        ``r0`` is a (B,) per-candidate offered-rate vector (a scalar sweep
+        broadcasts before the call), so one compiled sweep can score
+        placements at heterogeneous rates.
 
         The task dimension is collapsed before the loop: all instances of a
         component on a machine are interchangeable, so the state inside the
@@ -75,7 +79,7 @@ def _compiled_kernel(static: tuple):
             per = [None] * n_comp
             for i in topo:
                 if i in src:
-                    cir_i = jnp.full((B,), r0, dtype=s.dtype)
+                    cir_i = r0.astype(s.dtype)
                 else:
                     cir_i = jnp.zeros((B,), dtype=s.dtype)
                     for p in parents[i]:
@@ -137,9 +141,12 @@ def simulate_batch_jax(
     etg: ExecutionGraph,
     cluster: Cluster,
     task_machine: np.ndarray,
-    r0: float,
+    r0,
 ):
-    """JAX implementation of ``simulator.simulate_batch`` (same contract)."""
+    """JAX implementation of ``simulator.simulate_batch`` (same contract).
+
+    ``r0`` may be a scalar or a (B,) per-candidate rate vector.
+    """
     from jax.experimental import enable_x64
 
     # Imported here to avoid a cycle (simulator dispatches to this module).
@@ -150,6 +157,12 @@ def simulate_batch_jax(
     task_machine = np.asarray(task_machine, dtype=np.int64)
     if task_machine.ndim != 2 or task_machine.shape[1] != comp.shape[0]:
         raise ValueError("task_machine must be (B, T)")
+    r0 = np.asarray(r0, dtype=np.float64)
+    if r0.ndim not in (0, 1) or (
+        r0.ndim == 1 and r0.shape != (task_machine.shape[0],)
+    ):
+        raise ValueError("r0 must be a scalar or a (B,) vector")
+    r0_b = np.broadcast_to(r0, (task_machine.shape[0],)).copy()
 
     ttypes = utg.component_types
     e_cm = cluster.profile.e[ttypes][:, cluster.machine_types]      # (n, m)
@@ -159,7 +172,7 @@ def simulate_batch_jax(
     n_inst = np.asarray(etg.n_instances, dtype=np.float64)
     with enable_x64():
         ir, pr, tcu, util, thpt = kernel(
-            task_machine, comp, n_inst, e_cm, met_cm, cluster.capacity, float(r0)
+            task_machine, comp, n_inst, e_cm, met_cm, cluster.capacity, r0_b
         )
     return BatchSimResult(
         ir=np.asarray(ir),
@@ -168,3 +181,68 @@ def simulate_batch_jax(
         machine_util=np.asarray(util),
         throughput=np.asarray(thpt),
     )
+
+
+# ----------------------------------------------------- closed-form scoring
+
+
+@functools.lru_cache(maxsize=1)
+def _msr_kernel():
+    """Jitted closed-form max-stable-rate scorer (paper eq. 5 linearity).
+
+    Mirrors ``cost_model.max_stable_rate_batch``'s NumPy math: per-machine
+    utilization is ``met_w + R * var_w``, so the binding machine gives
+    ``R* = min_w (cap_w - met_w) / var_w``. Scatter-add association differs
+    from NumPy's sequential ``np.add.at``, so agreement is ~1e-15 relative,
+    not bit-exact — the NumPy backend stays the reference.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def kernel(task_machine, comp, unit_ir, e_cm, met_cm, capacity):
+        B, T = task_machine.shape
+        m = capacity.shape[0]
+        rows = jnp.arange(B)[:, None]
+        e = e_cm[comp[None, :], task_machine]        # (B, T)
+        met = met_cm[comp[None, :], task_machine]
+        var_w = (
+            jnp.zeros((B, m), dtype=e.dtype)
+            .at[rows, task_machine]
+            .add(e * unit_ir[None, :])
+        )
+        met_w = jnp.zeros((B, m), dtype=e.dtype).at[rows, task_machine].add(met)
+        head = capacity[None, :] - met_w
+        infeasible = jnp.any(head < 0.0, axis=1)
+        limits = jnp.where(var_w > 0.0, head / jnp.maximum(var_w, 1e-300), jnp.inf)
+        rates = jnp.clip(jnp.min(limits, axis=1), 0.0, None)
+        rates = jnp.where(infeasible, 0.0, rates)
+        return rates, rates * unit_ir.sum()
+
+    return kernel
+
+
+def max_stable_rate_batch_jax(
+    etg: ExecutionGraph,
+    cluster: Cluster,
+    task_machine: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray]:
+    """JAX backend for ``cost_model.max_stable_rate_batch`` (same contract)."""
+    from jax.experimental import enable_x64
+
+    from repro.core import cost_model
+
+    utg = etg.utg
+    comp = etg.task_component()
+    task_machine = np.asarray(task_machine, dtype=np.int64)
+    if task_machine.ndim != 2 or task_machine.shape[1] != comp.shape[0]:
+        raise ValueError("task_machine must be (B, T)")
+    unit_ir = cost_model.instance_rates(etg, 1.0)
+    ttypes = utg.component_types
+    e_cm = cluster.profile.e[ttypes][:, cluster.machine_types]
+    met_cm = cluster.profile.met[ttypes][:, cluster.machine_types]
+    with enable_x64():
+        rates, thpt = _msr_kernel()(
+            task_machine, comp, unit_ir, e_cm, met_cm, cluster.capacity
+        )
+    return np.asarray(rates), np.asarray(thpt)

@@ -78,14 +78,7 @@ def _flat_arrays(etg: ExecutionGraph, cluster: Cluster):
 def simulate(etg: ExecutionGraph, cluster: Cluster, r0: float) -> SimResult:
     """Single-placement steady state (thin wrapper over the batched core)."""
     machine = etg.task_machine()[None, :]
-    batch = simulate_batch(etg, cluster, machine, r0)
-    return SimResult(
-        ir=batch.ir[0],
-        pr=batch.pr[0],
-        tcu=batch.tcu[0],
-        machine_util=batch.machine_util[0],
-        throughput=float(batch.throughput[0]),
-    )
+    return simulate_batch(etg, cluster, machine, r0).row(0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +88,16 @@ class BatchSimResult:
     tcu: np.ndarray           # (B, T)
     machine_util: np.ndarray  # (B, m)
     throughput: np.ndarray    # (B,)
+
+    def row(self, i: int) -> SimResult:
+        """Single candidate row as a ``SimResult``."""
+        return SimResult(
+            ir=self.ir[i],
+            pr=self.pr[i],
+            tcu=self.tcu[i],
+            machine_util=self.machine_util[i],
+            throughput=float(self.throughput[i]),
+        )
 
 
 @functools.cache
@@ -109,6 +112,20 @@ def _jax_available() -> bool:
         return False
 
 
+def resolve_closed_form_backend(backend: str) -> str:
+    """Validate + resolve a closed-form scoring backend request.
+
+    Shared by ``cost_model.max_stable_rate_batch`` and
+    ``ScheduleState.score_task_machine_batch`` so the backend-string
+    contract and the graceful JAX-missing fallback live in one place
+    (``simulate_batch`` keeps its own richer policy: it also has an
+    ``"auto"`` batch-size threshold).
+    """
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}")
+    return "jax" if backend == "jax" and _jax_available() else "numpy"
+
+
 # Batches at least this large amortize JAX dispatch/compile overhead on the
 # fixed-point sweep; below it the NumPy path wins.
 _JAX_AUTO_THRESHOLD = 32_768  # B * T elements
@@ -118,7 +135,7 @@ def simulate_batch(
     etg: ExecutionGraph,
     cluster: Cluster,
     task_machine: np.ndarray,
-    r0: float,
+    r0,
     backend: str = "auto",
 ) -> BatchSimResult:
     """Evaluate B placements (same instance counts) in one vectorized sweep.
@@ -126,7 +143,10 @@ def simulate_batch(
     Args:
       etg: supplies the UTG and instance counts (its own assignment ignored).
       task_machine: (B, T) machine index per task per candidate.
-      r0: offered topology input rate at each spout.
+      r0: offered topology input rate at each spout — a scalar applied to
+        every candidate, or a (B,) vector with one rate per candidate row
+        (lets e.g. benchmarks score proposed-vs-default placements at their
+        own stable rates in a single sweep).
       backend: ``"numpy"`` (reference), ``"jax"`` (jitted
         ``lax.while_loop`` fixed point, float64 — agrees with NumPy to
         1e-9), or ``"auto"`` (JAX for large batches when importable, NumPy
@@ -156,6 +176,9 @@ def simulate_batch(
         raise ValueError("task_machine must be (B, T)")
     B, T = task_machine.shape
     m = cluster.n_machines
+    r0 = np.asarray(r0, dtype=np.float64)
+    if r0.ndim not in (0, 1) or (r0.ndim == 1 and r0.shape != (B,)):
+        raise ValueError("r0 must be a scalar or a (B,) vector")
 
     ttypes = utg.component_types[comp]                # (T,)
     mtypes = cluster.machine_types[task_machine]      # (B, T)

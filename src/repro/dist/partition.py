@@ -39,9 +39,13 @@ _REPLICATED_NAMES = ("norm", "scale", "bias", "rope", "step", "count")
 
 
 def mesh_axes(mesh: jax.sharding.Mesh, cfg: Any) -> tuple[tuple[str, ...], str]:
-    """(data axes present in the mesh, tensor-parallel axis name)."""
-    present = tuple(a for a in _DATA_AXES if a in mesh.shape)
-    return (present or ("data",)), _TP_AXIS
+    """(data axes present in the mesh, tensor-parallel axis name).
+
+    A mesh with no data axis (e.g. pure tensor parallelism) yields an empty
+    tuple: batch dims then replicate, which every consumer accepts — naming
+    an absent axis in a PartitionSpec would error instead.
+    """
+    return tuple(a for a in _DATA_AXES if a in mesh.shape), _TP_AXIS
 
 
 def _axis_size(mesh: jax.sharding.Mesh, axis: str) -> int:
@@ -85,7 +89,7 @@ def param_specs(params: Any, mesh: jax.sharding.Mesh, cfg: Any) -> Any:
 
 
 def _batched_spec(shape: tuple[int, ...], data_axes: tuple[str, ...], dsize: int) -> PartitionSpec:
-    if not shape or shape[0] % dsize != 0:
+    if not data_axes or not shape or shape[0] % dsize != 0:
         return PartitionSpec()
     return PartitionSpec(data_axes, *([None] * (len(shape) - 1)))
 
@@ -101,7 +105,7 @@ def batch_specs(batch: Any, mesh: jax.sharding.Mesh, cfg: Any) -> Any:
         shape = tuple(leaf.shape)
         # mrope positions are (3, B, S): batch is dim 1.
         if "mrope" in _path_str(path) and len(shape) == 3:
-            if shape[1] % dsize == 0:
+            if data_axes and shape[1] % dsize == 0:
                 return PartitionSpec(None, data_axes, None)
             return PartitionSpec()
         return _batched_spec(shape, data_axes, dsize)

@@ -204,8 +204,14 @@ def moe_block(
         dp_axes = ctx.data_axes
         E = cfg.n_experts
 
-        # EP group selection (see module docstring).
-        full_ep_axes = ("data", tp_axis)
+        # EP group selection (see module docstring). The full group is the
+        # intra-pod "data" axis (when the mesh has one — pure-TP meshes
+        # don't) plus the TP axis. Deliberately NOT ctx.data_axes: that may
+        # include the cross-pod "pod" axis, and expert all-to-alls over DCN
+        # would dwarf the expert compute — EP stays within a pod.
+        full_ep_axes = tuple(
+            a for a in ("data",) if a in ctx.mesh.shape
+        ) + (tp_axis,)
         full_ep = int(np.prod([ctx.mesh.shape[a] for a in full_ep_axes]))
         seq_shardable = S % tp == 0 and cfg.moe_ep_mode != "replicated"
         if seq_shardable and E % full_ep == 0:

@@ -1,0 +1,45 @@
+"""Shared hypothesis strategies for scheduler property/equivalence tests.
+
+Imported by ``test_core_properties.py`` and
+``test_engine_equivalence_random.py`` — both guard the import behind
+``pytest.importorskip("hypothesis")`` (the dev image may not ship
+hypothesis; see requirements-dev.txt), so this module may import it at the
+top level.
+"""
+
+import numpy as np
+from hypothesis import strategies as st
+
+from repro.core import UserGraph, paper_cluster, paper_profile
+
+PROFILE = paper_profile()
+
+
+@st.composite
+def random_dag(draw, max_components: int = 6):
+    """Random small DAG with spout 0 feeding everything (edges i->j, i<j)."""
+    n = draw(st.integers(2, max_components))
+    types = [0] + [draw(st.integers(1, 3)) for _ in range(n - 1)]
+    edges = set()
+    for j in range(1, n):
+        # at least one parent with smaller index
+        parent = draw(st.integers(0, j - 1))
+        edges.add((parent, j))
+        for i in range(j):
+            if draw(st.booleans()) and draw(st.booleans()):
+                edges.add((i, j))
+    alpha = [1.0] + [draw(st.floats(0.25, 3.0)) for _ in range(n - 1)]
+    return UserGraph(
+        name="rand",
+        component_types=np.array(types),
+        edges=tuple(sorted(edges)),
+        alpha=np.array(alpha),
+    )
+
+
+@st.composite
+def random_cluster(draw, max_per_type: int = 3):
+    counts = tuple(draw(st.integers(0, max_per_type)) for _ in range(3))
+    if sum(counts) == 0:
+        counts = (1, 1, 1)
+    return paper_cluster(counts, PROFILE)

@@ -4,52 +4,19 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings
+
+from sched_strategies import PROFILE, random_cluster, random_dag
 
 from repro.core import (
-    ExecutionGraph,
-    UserGraph,
     component_rates,
     first_assignment,
     max_stable_rate,
     paper_cluster,
-    paper_profile,
     predict,
     schedule,
     simulate,
 )
-
-PROFILE = paper_profile()
-
-
-@st.composite
-def random_dag(draw):
-    """Random small DAG with spout 0 feeding everything (edges i->j, i<j)."""
-    n = draw(st.integers(2, 6))
-    types = [0] + [draw(st.integers(1, 3)) for _ in range(n - 1)]
-    edges = set()
-    for j in range(1, n):
-        # at least one parent with smaller index
-        parent = draw(st.integers(0, j - 1))
-        edges.add((parent, j))
-        for i in range(j):
-            if draw(st.booleans()) and draw(st.booleans()):
-                edges.add((i, j))
-    alpha = [1.0] + [draw(st.floats(0.25, 3.0)) for _ in range(n - 1)]
-    return UserGraph(
-        name="rand",
-        component_types=np.array(types),
-        edges=tuple(sorted(edges)),
-        alpha=np.array(alpha),
-    )
-
-
-@st.composite
-def random_cluster(draw):
-    counts = tuple(draw(st.integers(0, 3)) for _ in range(3))
-    if sum(counts) == 0:
-        counts = (1, 1, 1)
-    return paper_cluster(counts, PROFILE)
 
 
 @given(random_dag(), st.floats(0.5, 50.0))

@@ -1,0 +1,46 @@
+"""Docs stay honest: internal links resolve and the documented quickstart
+snippet actually runs.
+
+Marked ``docs`` and deselected from tier-1 (pytest.ini): CI runs this suite
+in the dedicated docs job so the checks execute exactly once per CI run.
+Locally: ``pytest -m docs``.
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+pytestmark = pytest.mark.docs
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_docs_internal_links_resolve():
+    sys.path.insert(0, str(ROOT / "docs"))
+    try:
+        import check_links
+
+        assert check_links.main() == 0
+    finally:
+        sys.path.remove(str(ROOT / "docs"))
+
+
+def test_api_quickstart_snippet_runs():
+    env_src = str(ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "docs" / "run_quickstart.py")],
+        capture_output=True,
+        text=True,
+        env={"PYTHONPATH": env_src, "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "quickstart snippet: ok" in proc.stdout
+
+
+def test_docs_tree_complete():
+    for name in ("architecture.md", "paper_map.md", "api.md"):
+        assert (ROOT / "docs" / name).exists(), name
+    assert (ROOT / "README.md").exists()

@@ -1,0 +1,60 @@
+"""Hypothesis-randomized engine equivalence: on random DAG topologies and
+random cluster shapes, the incremental/state engines must reproduce the
+reference paths *exactly* — same schedules, same moves, same candidate
+counts — extending the fixed golden scenarios in
+``test_sched_equivalence.py`` to adversarial topology shapes.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
+from hypothesis import given, settings
+
+from sched_strategies import random_cluster, random_dag
+
+from repro.core import optimal_schedule, schedule
+from repro.core.refine import refine
+
+
+def _sched_fingerprint(s):
+    return (
+        s.rate,
+        s.etg.n_instances.tolist(),
+        s.etg.task_machine().tolist(),
+        s.iterations,
+        s.trace,
+    )
+
+
+@given(random_dag(), random_cluster())
+@settings(max_examples=25, deadline=None)
+def test_schedule_engines_agree_on_random_dags(topo, cluster):
+    ref = schedule(topo, cluster, r0=1.0, rate_epsilon=1.0, engine="reference")
+    inc = schedule(topo, cluster, r0=1.0, rate_epsilon=1.0, engine="incremental")
+    assert _sched_fingerprint(inc) == _sched_fingerprint(ref)
+
+
+@given(random_dag(), random_cluster(max_per_type=2))
+@settings(max_examples=10, deadline=None)
+def test_refine_engines_agree_on_random_dags(topo, cluster):
+    etg = schedule(topo, cluster, r0=1.0, rate_epsilon=1.0).etg
+    ref = refine(etg, cluster, max_rounds=3, engine="reference")
+    state = refine(etg, cluster, max_rounds=3, engine="state")
+    assert state.moves == ref.moves
+    assert state.rate == ref.rate
+    assert state.throughput == ref.throughput
+    assert state.etg.n_instances.tolist() == ref.etg.n_instances.tolist()
+    assert state.etg.task_machine().tolist() == ref.etg.task_machine().tolist()
+
+
+@given(random_dag(max_components=4), random_cluster(max_per_type=1))
+@settings(max_examples=10, deadline=None)
+def test_optimal_engines_agree_on_random_dags(topo, cluster):
+    budget = topo.n_components + 2
+    ref = optimal_schedule(topo, cluster, max_total_tasks=budget, engine="reference")
+    state = optimal_schedule(topo, cluster, max_total_tasks=budget, engine="state")
+    assert state.rate == ref.rate
+    assert state.throughput == ref.throughput
+    assert state.candidates_evaluated == ref.candidates_evaluated
+    assert state.etg.n_instances.tolist() == ref.etg.n_instances.tolist()
+    assert state.etg.task_machine().tolist() == ref.etg.task_machine().tolist()

@@ -1,10 +1,11 @@
-"""Golden tests: the incremental engine must reproduce the reference path
-exactly, and the JAX simulator backend must agree with NumPy to 1e-9.
+"""Golden tests: the incremental engines must reproduce the reference paths
+exactly, and the JAX backends must agree with NumPy to 1e-9.
 
 These are the acceptance gates for the incremental scheduling engine
-(``repro.core.schedule_state``): same final rate, same instance counts, same
-placement, same iteration trace as the seed implementation — not merely
-"close" — across topology shapes and cluster sizes.
+(``repro.core.schedule_state``) and the batch-scored refine/optimal engines
+built on it: same final rate, same instance counts, same placement, same
+iteration trace / move list / candidate count as the seed implementations —
+not merely "close" — across topology shapes and cluster sizes.
 """
 
 import numpy as np
@@ -14,12 +15,15 @@ from repro.core import (
     diamond_topology,
     linear_topology,
     max_stable_rate,
+    max_stable_rate_batch,
+    optimal_schedule,
     paper_cluster,
     rolling_count_topology,
     schedule,
     simulate_batch,
     star_topology,
 )
+from repro.core.refine import refine
 from repro.core.schedule_state import ScheduleState
 
 TOPOLOGIES = {
@@ -90,6 +94,128 @@ def test_optimal_symmetry_pruning_preserves_optimum():
         assert pruned.throughput == pytest.approx(full.throughput, rel=1e-12)
         assert pruned.rate == pytest.approx(full.rate, rel=1e-12)
         assert pruned.candidates_evaluated < full.candidates_evaluated
+
+
+# ------------------------------------------------- refine/optimal engines
+
+
+@pytest.mark.parametrize("topo_name", sorted(TOPOLOGIES))
+@pytest.mark.parametrize("cluster_name", sorted(CLUSTERS))
+def test_refine_engines_identical(topo_name, cluster_name):
+    """refine(engine="state") must replay the reference hill climb exactly:
+    same move list, same placement, same floats — the golden acceptance
+    gate for the delta-scored refinement engine."""
+    topo = TOPOLOGIES[topo_name]()
+    cluster = paper_cluster(CLUSTERS[cluster_name])
+    etg = schedule(topo, cluster, r0=1.0, rate_epsilon=0.5).etg
+    ref = refine(etg, cluster, engine="reference")
+    state = refine(etg, cluster, engine="state")
+    assert state.moves == ref.moves
+    assert state.rate == ref.rate
+    assert state.throughput == ref.throughput
+    assert state.etg.n_instances.tolist() == ref.etg.n_instances.tolist()
+    assert state.etg.task_machine().tolist() == ref.etg.task_machine().tolist()
+
+
+def test_refine_engines_identical_no_add():
+    cluster = paper_cluster((2, 2, 2))
+    etg = schedule(star_topology(), cluster, r0=1.0, rate_epsilon=0.5).etg
+    ref = refine(etg, cluster, allow_add=False, engine="reference")
+    state = refine(etg, cluster, allow_add=False, engine="state")
+    assert state.moves == ref.moves
+    assert state.etg.task_machine().tolist() == ref.etg.task_machine().tolist()
+    assert state.rate == ref.rate
+
+
+def test_refine_slow_suite_golden():
+    """Frozen expectations for the slow-suite scenario (rate_epsilon=0.05 on
+    the paper's 3-worker cluster) so the fast engine is pinned even when the
+    reference comparison doesn't run."""
+    cluster = paper_cluster((1, 1, 1))
+    etg = schedule(linear_topology(), cluster, r0=1.0, rate_epsilon=0.05).etg
+    res = refine(etg, cluster)
+    assert res.moves == ["grow c2x3", "swap c1#0<->c3#1"]
+    assert res.etg.n_instances.tolist() == [1, 1, 5, 4]
+    assert res.throughput == pytest.approx(22.727405035657107, rel=1e-12)
+
+
+@pytest.mark.parametrize("prune", [True, False])
+@pytest.mark.parametrize("max_per_machine", [None, 3])
+def test_optimal_engines_identical(prune, max_per_machine):
+    """optimal_schedule(engine="state") must reproduce the reference search
+    exactly, including the number of candidates surviving the filters."""
+    cluster = paper_cluster((2, 1, 1))
+    ref = optimal_schedule(
+        linear_topology(), cluster, max_total_tasks=6,
+        max_per_machine=max_per_machine, prune_symmetry=prune,
+        engine="reference",
+    )
+    state = optimal_schedule(
+        linear_topology(), cluster, max_total_tasks=6,
+        max_per_machine=max_per_machine, prune_symmetry=prune,
+        engine="state",
+    )
+    assert state.rate == ref.rate
+    assert state.throughput == ref.throughput
+    assert state.candidates_evaluated == ref.candidates_evaluated
+    assert state.etg.n_instances.tolist() == ref.etg.n_instances.tolist()
+    assert state.etg.task_machine().tolist() == ref.etg.task_machine().tolist()
+
+
+def test_engine_validation():
+    cluster = paper_cluster((1, 1, 1))
+    etg = schedule(linear_topology(), cluster, r0=1.0, rate_epsilon=0.5).etg
+    with pytest.raises(ValueError, match="engine"):
+        refine(etg, cluster, engine="quantum")
+    with pytest.raises(ValueError, match="engine"):
+        optimal_schedule(linear_topology(), cluster, max_total_tasks=5,
+                         engine="quantum")
+
+
+def test_schedule_state_deltas_match_rebuild():
+    """relocate/swap/drop deltas must leave the state identical to one
+    rebuilt from scratch off the resulting ETG."""
+    cluster = paper_cluster((2, 2, 2))
+    etg = schedule(linear_topology(), cluster, r0=1.0, rate_epsilon=0.5).etg
+    state = ScheduleState.from_etg(etg, cluster)
+    snap = state.snapshot()
+    state.add_instance(2, 4)
+    state.relocate_instance(2, 0, 5)
+    state.swap_instances(1, 0, 2, 1)
+    state.drop_instance(3, 0)
+    rebuilt = ScheduleState.from_etg(state.to_etg(), cluster)
+    assert np.array_equal(state.comp_counts, rebuilt.comp_counts)
+    assert np.array_equal(state.n_instances, rebuilt.n_instances)
+    assert np.allclose(state.var_load, rebuilt.var_load, rtol=0, atol=0)
+    assert np.allclose(state.met_load, rebuilt.met_load, rtol=0, atol=0)
+    state.restore(snap)
+    assert state.to_etg().task_machine().tolist() == etg.task_machine().tolist()
+    with pytest.raises(ValueError, match="instance"):
+        state.drop_instance(0, 0)  # spout has a single instance
+
+
+def test_state_batch_scorer_bit_exact():
+    """ScheduleState.score_task_machine_batch must equal
+    max_stable_rate_batch bit-for-bit — the refine engine's equivalence
+    guarantee rests on it."""
+    cluster = paper_cluster((2, 2, 2))
+    etg = schedule(diamond_topology(), cluster, r0=1.0, rate_epsilon=0.5).etg
+    state = ScheduleState.from_etg(etg, cluster)
+    rng = np.random.default_rng(11)
+    tm = rng.integers(0, cluster.n_machines, size=(64, etg.total_tasks))
+    r_ref, t_ref = max_stable_rate_batch(etg, cluster, tm)
+    r_st, t_st = state.score_task_machine_batch(tm)
+    assert np.array_equal(r_ref, r_st)
+    assert np.array_equal(t_ref, t_st)
+    # modified instance-count vector (ADD-style candidates)
+    n_new = state.n_instances.copy()
+    n_new[2] += 1
+    tm2 = rng.integers(0, cluster.n_machines, size=(16, etg.total_tasks + 1))
+    template = state.template_etg(n_new)
+    r_ref2, t_ref2 = max_stable_rate_batch(template, cluster, tm2)
+    r_st2, t_st2 = state.score_task_machine_batch(tm2, n_new)
+    assert np.array_equal(r_ref2, r_st2)
+    assert np.array_equal(t_ref2, t_st2)
 
 
 def test_schedule_state_loads_match_prediction():
@@ -163,6 +289,45 @@ def test_backpressure_fixed_point_converges_saturated():
         stable = simulate_batch(etg, cluster, tm, rate * 0.99, backend=backend)
         # saturated throughput is bounded, not linear in offered rate
         assert res.throughput[0] <= stable.throughput[0] * 1100
+
+
+def test_max_stable_rate_batch_jax_backend():
+    """The jitted closed-form scorer agrees with NumPy to 1e-9 (scatter-add
+    association differs, so bit-exactness is not expected)."""
+    pytest.importorskip("jax")
+    cluster = paper_cluster((2, 2, 2))
+    etg = schedule(diamond_topology(), cluster, r0=1.0, rate_epsilon=0.5).etg
+    rng = np.random.default_rng(5)
+    tm = rng.integers(0, cluster.n_machines, size=(128, etg.total_tasks))
+    rn, tn = max_stable_rate_batch(etg, cluster, tm, backend="numpy")
+    rj, tj = max_stable_rate_batch(etg, cluster, tm, backend="jax")
+    assert np.allclose(rn, rj, rtol=1e-9, atol=1e-9)
+    assert np.allclose(tn, tj, rtol=1e-9, atol=1e-9)
+    with pytest.raises(ValueError, match="backend"):
+        max_stable_rate_batch(etg, cluster, tm, backend="tpu")
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_simulate_batch_per_row_rates(backend):
+    """A (B,) r0 vector must match per-row scalar sweeps on both backends
+    (to the fixed point's own tolerance — batch rows share the convergence
+    criterion)."""
+    if backend == "jax":
+        pytest.importorskip("jax")
+    cluster = paper_cluster((1, 1, 1))
+    etg = schedule(rolling_count_topology(), cluster, r0=1.0, rate_epsilon=0.5).etg
+    base, _ = max_stable_rate(etg, cluster)
+    tm = np.tile(etg.task_machine(), (3, 1))
+    rates = np.array([0.5 * base, base, 100.0 * base])
+    batch = simulate_batch(etg, cluster, tm, rates, backend=backend)
+    for i, r in enumerate(rates):
+        solo = simulate_batch(etg, cluster, tm[i : i + 1], float(r), backend=backend)
+        assert np.allclose(batch.pr[i], solo.pr[0], rtol=1e-8, atol=1e-8)
+        assert np.allclose(
+            batch.machine_util[i], solo.machine_util[0], rtol=1e-8, atol=1e-8
+        )
+    with pytest.raises(ValueError, match="r0"):
+        simulate_batch(etg, cluster, tm, np.ones(5), backend=backend)
 
 
 def test_simulator_backend_fallback_and_validation():

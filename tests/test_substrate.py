@@ -181,6 +181,28 @@ def test_trainer_skips_nan_steps(tmp_path):
 
 # ---------------------------------------------------------------- planner
 
+def test_partition_replicates_on_mesh_without_data_axis():
+    """A pure tensor-parallel mesh (no "data"/"pod" axis) must fall back to
+    replication — never emit a PartitionSpec naming an absent axis."""
+    from jax.sharding import Mesh, PartitionSpec
+
+    from repro.dist import partition
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("model",))
+    data_axes, tp = partition.mesh_axes(mesh, cfg=None)
+    assert data_axes == ()
+    assert tp == "model"
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((4, 8), jnp.int32),
+        "mrope_positions": jax.ShapeDtypeStruct((3, 4, 8), jnp.int32),
+    }
+    specs = partition.batch_specs(batch, mesh, cfg=None)
+    assert all(s == PartitionSpec() for s in jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, PartitionSpec)))
+    # NamedSharding construction must succeed (this is what used to error).
+    partition.shardings(specs, mesh)
+
+
 def test_planner_beats_round_robin_on_heterogeneous_fleet():
     from repro.configs import get_config
     from repro.sched.fleet import DevicePool, Fleet, TPU_LITE, TPU_V4, TPU_V5E
