@@ -1,0 +1,146 @@
+"""Calibrate the closed-form scorer's NumPy/JAX dispatch crossover.
+
+``max_stable_rate_batch`` / ``ScheduleState.score_task_machine_batch`` can
+run the eq. 5 closed form either through NumPy's sequential ``np.add.at``
+accumulation (the bit-exact reference) or through the jitted JAX
+scatter-add kernel (~1e-15 relative agreement). The JAX path pays a fixed
+dispatch cost per call but scales better, so ``backend="auto"`` needs a
+crossover point: below it NumPy wins, above it JAX does.
+
+This benchmark times both backends over a (task count × batch size) grid
+that brackets the real workloads — small-cluster refine sweeps (tens of
+rows × ~10 tasks) up to the paper's large-cluster RELOCATE+SWAP chunks
+(16 384 rows × ~650 tasks ≈ 10 M elements) — locates the crossover in
+``B * T`` elements per (task-count) row of the grid, and records everything
+in ``BENCH_dispatch.json``.
+
+Recorded calibration (2-core CPU-only container): the jitted kernel is
+0.2-0.4× NumPy at *every* grid point — XLA's CPU scatter-add is serial —
+so ``"auto"`` resolves to NumPy whenever JAX's default backend is the CPU,
+and the ``simulator._CLOSED_FORM_AUTO_THRESHOLD`` element floor only
+engages on accelerator backends. Re-run this benchmark on new hardware and
+set ``REPRO_CLOSED_FORM_JAX_THRESHOLD`` (elements) if the picture differs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import paper_cluster, schedule, wide_fanout_topology
+from repro.core.schedule_state import ScheduleState
+from repro.core.simulator import (
+    _closed_form_auto_threshold,
+    resolve_closed_form_backend,
+)
+
+# Batch sizes swept per task count (rows per sweep).
+BATCH_SIZES = (1, 8, 64, 256, 1024, 4096, 16384)
+# (cluster counts, target tasks label) — spans refine's sweep shapes.
+SCENARIOS = (
+    ((1, 1, 1), "small"),
+    ((2, 2, 2), "medium"),
+    ((20, 70, 90), "large"),
+)
+
+
+def _time_backend(state: ScheduleState, tm: np.ndarray, backend: str,
+                  iters: int = 5) -> float:
+    """Median wall time (s) of one scored sweep (post-warmup, so the JAX
+    number is steady-state dispatch, not compilation)."""
+    for _ in range(2):
+        state.score_task_machine_batch(tm, backend=backend)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        state.score_task_machine_batch(tm, backend=backend)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def bench_dispatch() -> dict:
+    rng = np.random.default_rng(0)
+    jax_available = resolve_closed_form_backend("jax") == "jax"
+    grid = []
+    crossovers = []
+    for counts, label in SCENARIOS:
+        cluster = paper_cluster(counts)
+        topo = wide_fanout_topology(6)
+        sched = schedule(topo, cluster, r0=1.0, rate_epsilon=1.0)
+        state = ScheduleState.from_etg(sched.etg, cluster)
+        T = int(state.n_instances.sum())
+        rows = []
+        for B in BATCH_SIZES:
+            tm = rng.integers(0, cluster.n_machines, size=(B, T))
+            t_np = _time_backend(state, tm, "numpy")
+            row = {
+                "scenario": label,
+                "tasks": T,
+                "batch": B,
+                "elements": B * T,
+                "numpy_us": round(t_np * 1e6, 1),
+            }
+            if jax_available:
+                t_jax = _time_backend(state, tm, "jax")
+                row["jax_us"] = round(t_jax * 1e6, 1)
+                row["jax_speedup"] = round(t_np / max(t_jax, 1e-12), 2)
+            rows.append(row)
+        grid.extend(rows)
+        if jax_available:
+            # Crossover = smallest sweep from which JAX wins by a real
+            # margin (10%+) at that size and every larger one — a single
+            # noisy win on a microsecond-scale batch is not a crossover.
+            for i, row in enumerate(rows):
+                if all(r["jax_speedup"] >= 1.1 for r in rows[i:]):
+                    crossovers.append(
+                        {
+                            "scenario": label,
+                            "tasks": T,
+                            "crossover_elements": row["elements"],
+                        }
+                    )
+                    break
+    threshold = _closed_form_auto_threshold()
+    return {
+        "jax_available": jax_available,
+        "grid": grid,
+        "crossovers": crossovers,
+        "auto_threshold_elements": (
+            None if np.isinf(threshold) else int(threshold)
+        ),
+        "auto_picks_jax": bool(np.isfinite(threshold)),
+    }
+
+
+def main(json_path: str | None = None) -> None:
+    out = bench_dispatch()
+    for c in out["crossovers"]:
+        emit(
+            f"dispatch_crossover_{c['scenario']}",
+            float(c["crossover_elements"]),
+            f"tasks={c['tasks']};threshold={out['auto_threshold_elements']}",
+        )
+    if not out["crossovers"]:
+        emit(
+            "dispatch_crossover",
+            0.0,
+            f"jax_available={out['jax_available']};"
+            f"auto_picks_jax={out['auto_picks_jax']};"
+            "numpy_wins_all_measured_sizes",
+        )
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--json", default=None,
+                        help="write BENCH_dispatch.json here")
+    args = parser.parse_args()
+    main(json_path=args.json)

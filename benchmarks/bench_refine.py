@@ -8,7 +8,11 @@ copy-and-score paths, and the ``state`` engines that express moves as
 test suite's scenario (the paper's 3-worker cluster, rate_epsilon=0.05
 schedules — ``test_refined_schedule_within_4pct_of_optimal``), verifies the
 engines return identical results, and records the speedups the repo
-regresses against (target: >= 10x on the refine scenario).
+regresses against (target: >= 10x on the refine scenario). The wide
+scenario additionally times the lockstep growth-chain explorer against the
+sequential one (target: >= 2x at 10+ components), and the exhaustive
+search runs with the closed-form beam bound (candidates include its
+pruning).
 """
 
 from __future__ import annotations
@@ -25,11 +29,74 @@ from repro.core import (
     paper_cluster,
     schedule,
     star_topology,
+    wide_fanout_topology,
 )
 from repro.core.refine import refine
 
 TOPOLOGIES = (linear_topology, diamond_topology, star_topology)
 SLOW_SUITE_CLUSTER = (1, 1, 1)
+WIDE_CLUSTER = (2, 2, 2)
+
+
+def _interleaved_median_times(fns, repeats: int = 5) -> list[float]:
+    """Median wall time per fn, with the fns' runs interleaved round-robin
+    so slow drift on a shared runner hits every fn equally."""
+    times: list[list[float]] = [[] for _ in fns]
+    for _ in range(repeats):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            fn()
+            times[i].append(time.perf_counter() - t0)
+    return [sorted(ts)[len(ts) // 2] for ts in times]
+
+
+def bench_refine_wide(skip_reference: bool = False) -> dict:
+    """Wide-topology refine: lockstep vs sequential chain exploration.
+
+    The acceptance target for the lockstep explorer is >= 2x over the
+    sequential state engine on this scenario (both bit-identical to the
+    reference climb, which is also timed unless skipped). 14 mid bolts ->
+    C(16, 2) = 120 pair chains per round; state engines are timed as
+    interleaved medians of 5 runs (sub-second timings drift on shared
+    runners)."""
+    cluster = paper_cluster(WIDE_CLUSTER)
+    topo = wide_fanout_topology(14)
+    etg = schedule(topo, cluster, r0=1.0, rate_epsilon=0.1).etg
+    lock = refine(etg, cluster, lockstep=True)   # warm + results
+    seq = refine(etg, cluster, lockstep=False)
+    t_lock, t_seq = _interleaved_median_times(
+        (
+            lambda: refine(etg, cluster, lockstep=True),
+            lambda: refine(etg, cluster, lockstep=False),
+        )
+    )
+    out = {
+        "scenario": f"{topo.name}_{'_'.join(map(str, WIDE_CLUSTER))}",
+        "tasks": int(etg.total_tasks),
+        "components": int(topo.n_components),
+        "moves": len(lock.moves),
+        "lockstep_s": round(t_lock, 4),
+        "sequential_s": round(t_seq, 4),
+        "lockstep_speedup": round(t_seq / max(t_lock, 1e-9), 1),
+        "identical": bool(
+            lock.moves == seq.moves
+            and lock.throughput == seq.throughput
+            and lock.etg.task_machine().tolist()
+            == seq.etg.task_machine().tolist()
+        ),
+    }
+    if not skip_reference:
+        t0 = time.perf_counter()
+        ref = refine(etg, cluster, engine="reference")
+        t_ref = time.perf_counter() - t0
+        out["reference_s"] = round(t_ref, 4)
+        out["speedup_vs_reference"] = round(t_ref / max(t_lock, 1e-9), 1)
+        out["identical"] = bool(
+            out["identical"]
+            and ref.moves == lock.moves
+            and ref.throughput == lock.throughput
+        )
+    return out
 
 
 def bench_refine_engines(skip_reference: bool = False) -> dict:
@@ -123,6 +190,14 @@ def main(json_path: str | None = None, skip_reference: bool = False) -> None:
             if k not in ("topologies", "state_total_s")
         ),
     )
+    wide_bench = bench_refine_wide(skip_reference=skip_reference)
+    emit(
+        "refine_wide_lockstep",
+        wide_bench["lockstep_s"] * 1e6,
+        ";".join(
+            f"{k}={v}" for k, v in wide_bench.items() if k != "lockstep_s"
+        ),
+    )
     opt_bench = bench_optimal_engines(skip_reference=skip_reference)
     emit(
         "optimal_engines",
@@ -131,7 +206,15 @@ def main(json_path: str | None = None, skip_reference: bool = False) -> None:
     )
     if json_path:
         with open(json_path, "w") as f:
-            json.dump({"refine": ref_bench, "optimal": opt_bench}, f, indent=2)
+            json.dump(
+                {
+                    "refine": ref_bench,
+                    "refine_wide": wide_bench,
+                    "optimal": opt_bench,
+                },
+                f,
+                indent=2,
+            )
             f.write("\n")
 
 

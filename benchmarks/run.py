@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig10  large-scale simulation scenarios + Table 4/5
   sec3   scheduler wall-time vs exhaustive optimal
   refine refine/optimal engine baseline (writes BENCH_refine.json)
+  dispatch closed-form scorer backend crossover (writes BENCH_dispatch.json)
   planner beyond-paper heterogeneous LM fleet planning
   roofline dry-run roofline aggregation (requires dry-run artifacts)
 """
@@ -16,6 +17,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
 from __future__ import annotations
 
 from benchmarks import (
+    bench_dispatch,
     bench_instances,
     bench_largescale,
     bench_planner,
@@ -37,6 +39,7 @@ def main() -> None:
     bench_largescale.main()
     bench_sched_speed.main(json_path="BENCH_sched.json")
     bench_refine.main(json_path="BENCH_refine.json")
+    bench_dispatch.main(json_path="BENCH_dispatch.json")
     bench_planner.main()
     bench_roofline.main()
 

@@ -27,6 +27,7 @@ from repro.core.graph import (
     rolling_count_topology,
     star_topology,
     unique_visitor_topology,
+    wide_fanout_topology,
 )
 from repro.core.maximize_throughput import Schedule, maximize_throughput, schedule
 from repro.core.metrics import gain_ratio, prediction_accuracy, weighted_utilization
@@ -50,6 +51,7 @@ __all__ = [
     "rolling_count_topology",
     "star_topology",
     "unique_visitor_topology",
+    "wide_fanout_topology",
     "Schedule",
     "ScheduleState",
     "maximize_throughput",

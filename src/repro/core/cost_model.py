@@ -33,6 +33,7 @@ __all__ = [
     "closed_form_rates",
     "max_stable_rate",
     "max_stable_rate_batch",
+    "per_row_task_maps",
 ]
 
 
@@ -132,38 +133,104 @@ def max_stable_rate(etg: ExecutionGraph, cluster: Cluster) -> tuple[float, float
     return float(rate[0]), float(thpt[0])
 
 
+def per_row_task_maps(
+    cir_unit: np.ndarray, n_instances: np.ndarray, n_tasks: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-row (component, unit-IR) task maps for a (B, n) count matrix.
+
+    Supports candidate batches whose rows carry *different* instance-count
+    vectors (e.g. lockstep growth chains growing different components), as
+    long as every row has the same task total ``n_tasks`` — rectangular
+    batches keep the vectorized scoring shape-stable.
+
+    Per row b, task j belongs to the component whose cumulative count block
+    contains j (paper eq. 3 order), and its unit input rate is
+    ``cir_unit[c] / n_instances[b, c]`` — the same per-component division
+    then gather the shared-count path performs, so per-row scores are
+    bit-identical to scoring each row against its own template.
+
+    Returns:
+      (comp, unit_ir), each (B, n_tasks).
+    """
+    n_instances = np.asarray(n_instances, dtype=np.int64)
+    if n_instances.ndim != 2:
+        raise ValueError("per-row n_instances must be (B, n)")
+    if np.any(n_instances < 1):
+        raise ValueError("every component needs >= 1 instance (paper constraint)")
+    if np.any(n_instances.sum(axis=1) != n_tasks):
+        raise ValueError(
+            "per-row n_instances must all sum to task_machine's task count"
+        )
+    # Batches built from candidate sweeps repeat count vectors in runs (a
+    # lockstep chain contributes one vector for all m of its consecutive
+    # rows), so map one representative per run and fan the results back
+    # out — O(B·n) grouping, no sort. Values are unchanged: each row's
+    # maps still come from its own vector.
+    B = n_instances.shape[0]
+    if B > 1:
+        starts = np.empty(B, dtype=bool)
+        starts[0] = True
+        np.any(n_instances[1:] != n_instances[:-1], axis=1, out=starts[1:])
+        reps = n_instances[starts]                     # (U, n)
+        inverse = np.cumsum(starts) - 1                # (B,)
+    else:
+        reps, inverse = n_instances, np.zeros(B, dtype=np.int64)
+    ends = np.cumsum(reps, axis=1)                     # (U, n)
+    comp_u = (np.arange(n_tasks)[None, :] >= ends[:, :, None]).sum(axis=1)
+    per_unit = cir_unit[None, :] / reps                # (U, n)
+    unit_ir_u = np.take_along_axis(per_unit, comp_u, axis=1)
+    return comp_u[inverse], unit_ir_u[inverse]
+
+
 def max_stable_rate_batch(
     etg: ExecutionGraph,
     cluster: Cluster,
     task_machine: np.ndarray,
     backend: str = "numpy",
+    n_instances: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Vectorized ``max_stable_rate`` over B placements (same instance counts).
+    """Vectorized ``max_stable_rate`` over B placements.
 
     Args:
       task_machine: (B, T) machine index per task per candidate placement.
       backend: ``"numpy"`` (default; the reference floats — the refine and
-        optimal engines' equivalence guarantees rely on it) or ``"jax"``
+        optimal engines' equivalence guarantees rely on it), ``"jax"``
         (jitted float64 closed form, ~1e-15 relative agreement; falls back
-        to NumPy when JAX is unavailable — worthwhile for very large B).
+        to NumPy when JAX is unavailable — worthwhile for very large B), or
+        ``"auto"`` (JAX above the calibrated element-count crossover, see
+        ``simulator.resolve_closed_form_backend`` / benchmarks/bench_dispatch.py).
+      n_instances: optional (B, n) per-row instance-count matrix overriding
+        ``etg.n_instances`` row by row (every row must sum to T). Lets one
+        sweep score candidates that grow/shrink *different* components.
 
     Returns:
       (rates, throughputs), each (B,).
     """
     from repro.core.simulator import resolve_closed_form_backend
 
-    if resolve_closed_form_backend(backend) == "jax":
+    task_machine = np.asarray(task_machine, dtype=np.int64)
+    if resolve_closed_form_backend(backend, task_machine.size) == "jax":
         from repro.core.sim_jax import max_stable_rate_batch_jax
 
-        return max_stable_rate_batch_jax(etg, cluster, task_machine)
-    comp = etg.task_component()
-    task_types = etg.utg.component_types[comp]
-    unit_ir = instance_rates(etg, 1.0)                 # (T,) IR per unit R
-    task_machine = np.asarray(task_machine, dtype=np.int64)
+        return max_stable_rate_batch_jax(
+            etg, cluster, task_machine, n_instances=n_instances
+        )
+    if n_instances is not None:
+        if task_machine.ndim != 2:
+            raise ValueError("task_machine must be (B, T)")
+        cir_unit = component_rates(etg.utg, 1.0)
+        comp, unit_ir = per_row_task_maps(
+            cir_unit, n_instances, task_machine.shape[1]
+        )                                              # each (B, T)
+        task_types = etg.utg.component_types[comp]     # (B, T)
+    else:
+        comp = etg.task_component()
+        task_types = etg.utg.component_types[comp][None, :]
+        unit_ir = instance_rates(etg, 1.0)             # (T,) IR per unit R
 
     mtypes = cluster.machine_types[task_machine]       # (B, T)
-    e = cluster.profile.e[task_types[None, :], mtypes]
-    met = cluster.profile.met[task_types[None, :], mtypes]
+    e = cluster.profile.e[task_types, mtypes]
+    met = cluster.profile.met[task_types, mtypes]
     return closed_form_rates(task_machine, e, met, unit_ir, cluster.capacity)
 
 
@@ -182,14 +249,20 @@ def closed_form_rates(
     ``ScheduleState.score_task_machine_batch`` call this — the engines'
     bit-identical-scoring contract rests on there being exactly one copy
     (``sim_jax._msr_kernel`` mirrors it in JAX, ~1e-15 agreement).
+
+    ``unit_ir`` is (T,) when every row shares one instance-count vector, or
+    (B, T) when rows carry their own (``per_row_task_maps``). NumPy's
+    pairwise row sum makes the per-row throughput reduction bit-identical
+    to the shared one.
     """
     B, T = task_machine.shape
     m = capacity.shape[0]
     rows = np.repeat(np.arange(B), T)
     cols = task_machine.reshape(-1)
+    unit_ir_bt = unit_ir if unit_ir.ndim == 2 else unit_ir[None, :]
     var_w = np.zeros((B, m), dtype=np.float64)
     met_w = np.zeros((B, m), dtype=np.float64)
-    np.add.at(var_w, (rows, cols), (e * unit_ir[None, :]).reshape(-1))
+    np.add.at(var_w, (rows, cols), (e * unit_ir_bt).reshape(-1))
     np.add.at(met_w, (rows, cols), met.reshape(-1))
 
     head = capacity[None, :] - met_w                   # (B, m)
@@ -200,4 +273,6 @@ def closed_form_rates(
         limits = np.where(var_w > 0.0, head / np.maximum(var_w, 1e-300), np.inf)
     rates = np.min(limits, axis=1)
     rates = np.where(infeasible, 0.0, np.clip(rates, 0.0, None))
+    if unit_ir.ndim == 2:
+        return rates, rates * unit_ir.sum(axis=1)
     return rates, rates * unit_ir.sum()

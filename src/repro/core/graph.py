@@ -32,6 +32,7 @@ __all__ = [
     "star_topology",
     "rolling_count_topology",
     "unique_visitor_topology",
+    "wide_fanout_topology",
 ]
 
 
@@ -231,4 +232,26 @@ def unique_visitor_topology() -> UserGraph:
         component_types=np.array([SPOUT, HIGH, HIGH]),
         edges=((0, 1), (1, 2)),
         alpha=np.array([1.0, 1.0, 1.0]),
+    )
+
+
+def wide_fanout_topology(n_mid: int = 8) -> UserGraph:
+    """Spout fanning out to ``n_mid`` bolts (types cycling low/mid/high),
+    all feeding one low-compute sink.
+
+    Beyond-paper stress shape for wide topologies: with n components a
+    refine round explores n single growth chains plus 2·C(n, 2) pair
+    forks, which is what the lockstep chain explorer batches (see
+    docs/architecture.md). Used by the wide golden equivalence tests and
+    benchmarks/bench_refine.py's wide scenario."""
+    n = n_mid + 2
+    types = np.array([SPOUT] + [1 + (i % 3) for i in range(n_mid)] + [LOW])
+    edges = tuple((0, j) for j in range(1, n_mid + 1)) + tuple(
+        (j, n - 1) for j in range(1, n_mid + 1)
+    )
+    return UserGraph(
+        name=f"wide{n_mid}",
+        component_types=types,
+        edges=edges,
+        alpha=np.ones(n),
     )

@@ -3,7 +3,7 @@
 The paper's brute-force baseline enumerates every (instance-count vector,
 placement) combination, evaluates the overall throughput of each, and keeps
 the best. The paper reports ~18 hours for 27 405 possibilities on a 4-socket
-Xeon server; our beyond-paper speedup comes from four observations:
+Xeon server; our beyond-paper speedup comes from five observations:
 
 1. Instances of one component are interchangeable, so a placement is fully
    described by *how many* instances of each component land on each machine —
@@ -18,6 +18,11 @@ Xeon server; our beyond-paper speedup comes from four observations:
 4. Machines of one type (and capacity) are interchangeable, so only one
    canonical representative per within-type permutation class needs
    scoring (``prune_symmetry``) — the rest are duplicates by symmetry.
+5. The closed form also bounds a whole composition class from above
+   without enumerating it (``prune_bound``): relaxing the per-machine
+   constraints to their aggregate sum — and each component to its best
+   single machine — gives an O(n·m) R* upper bound, so classes that
+   cannot strictly beat the running best are skipped entirely.
 
 Engines
 -------
@@ -44,11 +49,75 @@ from typing import Iterator, Sequence
 
 import numpy as np
 
-from repro.core.cost_model import max_stable_rate, max_stable_rate_batch
+from repro.core.cost_model import (
+    component_rates,
+    max_stable_rate,
+    max_stable_rate_batch,
+)
 from repro.core.graph import ExecutionGraph, UserGraph
 from repro.core.profiles import Cluster
 
 __all__ = ["OptimalResult", "optimal_schedule", "placement_score"]
+
+# Relative inflation applied to the closed-form class bound before pruning:
+# the bound math is exact in real arithmetic, so this only has to absorb
+# float rounding between the bound's reductions and the scorer's (1e-15
+# scale) — a pruned class then provably cannot contain a strict improvement.
+_BOUND_SLACK = 1e-12
+
+
+def _class_bound(
+    n_inst: np.ndarray,
+    cir_unit: np.ndarray,
+    e_cm: np.ndarray,
+    met_cm: np.ndarray,
+    capacity: np.ndarray,
+) -> float:
+    """Upper bound on max stable throughput over *all* placements with
+    instance counts ``n_inst`` — no enumeration, O(n·m).
+
+    Two closed-form relaxations of ``R* = min_w (cap_w - met_w) / var_w``
+    (both ignore that tasks compete for the same machines, so they can only
+    over-estimate):
+
+    * **aggregate** — summing the per-machine feasibility constraints gives
+      ``R <= (Σ cap_w - Σ met_w) / Σ var_w``; lower-bounding each task's
+      fixed/variable contribution by its cheapest machine keeps it an upper
+      bound.
+    * **per-task** — any task of component c lands on *some* machine w, and
+      that machine's constraint alone gives
+      ``R <= (cap_w - met_cw) / (e_cw · u_c)``; the best case is the max
+      over machines, and every component must satisfy its own, so the min
+      over components bounds R.
+
+    Returns the bounded throughput (``R_ub * Σ_c CIR_c(1)``), inflated by
+    ``_BOUND_SLACK``; ``inf`` when unbounded, ``0.0`` when the class is
+    infeasible at any rate (some component's fixed MET alone exceeds every
+    machine's capacity, or total fixed MET exceeds total capacity).
+    """
+    u = cir_unit / n_inst                               # (n,) per-task rate
+    total_met_min = float((n_inst * met_cm.min(axis=1)).sum())
+    sum_cap = float(capacity.sum())
+    if sum_cap < total_met_min:
+        return 0.0
+    total_var_min = float((n_inst * (e_cm.min(axis=1) * u)).sum())
+    r_agg = (
+        np.inf
+        if total_var_min <= 0.0
+        else (sum_cap - total_met_min) / total_var_min
+    )
+    head = capacity[None, :] - met_cm                   # (n, m)
+    ok = head >= 0.0
+    if not np.all(ok.any(axis=1)):
+        return 0.0  # some component fits on no machine even alone
+    var = e_cm * u[:, None]                             # (n, m)
+    with np.errstate(divide="ignore", over="ignore"):
+        lim = np.where(var > 0.0, head / np.maximum(var, 1e-300), np.inf)
+    lim = np.where(ok, lim, -np.inf)
+    r_ub = min(r_agg, float(lim.max(axis=1).min()))
+    if not np.isfinite(r_ub):
+        return np.inf
+    return r_ub * float(cir_unit.sum()) * (1.0 + _BOUND_SLACK)
 
 
 def placement_score(etg: ExecutionGraph, cluster: Cluster) -> float:
@@ -155,6 +224,7 @@ class OptimalResult:
     rate: float
     throughput: float
     candidates_evaluated: int
+    classes_pruned: int = 0
 
 
 def optimal_schedule(
@@ -164,8 +234,9 @@ def optimal_schedule(
     max_per_machine: int | None = None,
     batch_size: int = 8192,
     prune_symmetry: bool = True,
+    prune_bound: bool = True,
     engine: str = "state",
-    backend: str = "numpy",
+    backend: str = "auto",
 ) -> OptimalResult:
     """Exhaustive search. Exponential — only for small benchmark topologies.
 
@@ -183,29 +254,52 @@ def optimal_schedule(
         (roughly by ``prod_types c_t!`` on spread-out placements). The
         winning canonical placement *is* a concrete placement; disabling
         this re-enumerates every symmetric duplicate (for tests/audits).
+      prune_bound: skip whole composition classes whose closed-form R* beam
+        bound (``_class_bound``: aggregate-capacity and per-task
+        relaxations) cannot strictly beat the best throughput found so far
+        — no candidate of a pruned class is ever enumerated. Exact: the
+        returned optimum is unchanged (a pruned class contains no strict
+        improvement), and under bit-exact scoring (``backend="numpy"``, or
+        ``"auto"`` below the dispatch crossover — every test scenario) both
+        engines prune identically so ``candidates_evaluated`` still
+        matches. The engines chunk sweeps differently, so if ``"auto"``
+        resolves JAX for some sweeps (accelerator hosts, very large
+        classes) their ~1e-15 scores may break exact ties differently.
+        ``classes_pruned`` on the result counts the skips.
       engine: ``"state"`` (vectorized enumeration + filters, default) or
         ``"reference"`` (original per-candidate loop). Identical results.
       backend: closed-form scoring backend forwarded to
-        ``max_stable_rate_batch`` — ``"numpy"`` (default; the reference
-        floats) or ``"jax"`` (jitted float64, ~1e-15 agreement).
+        ``max_stable_rate_batch`` — ``"auto"`` (default: NumPy below the
+        calibrated dispatch crossover, JAX above), ``"numpy"`` (the
+        reference floats), or ``"jax"`` (jitted float64, ~1e-15 agreement).
     """
     if engine == "state":
         return _optimal_state(
             utg, cluster, max_total_tasks, max_per_machine, batch_size,
-            prune_symmetry, backend,
+            prune_symmetry, prune_bound, backend,
         )
     if engine != "reference":
         raise ValueError(f"unknown engine {engine!r}; use 'state' or 'reference'")
     n = utg.n_components
     m = cluster.n_machines
     runs = _symmetry_runs(cluster) if prune_symmetry else []
+    cir_unit = component_rates(utg, 1.0)
+    e_cm = cluster.profile.e[utg.component_types][:, cluster.machine_types]
+    met_cm = cluster.profile.met[utg.component_types][:, cluster.machine_types]
     best_etg: ExecutionGraph | None = None
     best_thpt = -1.0
     evaluated = 0
+    pruned_classes = 0
 
     # Enumerate instance-count vectors: each component >= 1 (paper constraint).
     for extra in _compositions_upto(max_total_tasks - n, n):
         n_inst = np.asarray(extra, dtype=np.int64) + 1
+        if prune_bound and (
+            _class_bound(n_inst, cir_unit, e_cm, met_cm, cluster.capacity)
+            <= best_thpt
+        ):
+            pruned_classes += 1
+            continue
         template = ExecutionGraph(
             utg=utg,
             n_instances=n_inst,
@@ -255,6 +349,7 @@ def optimal_schedule(
         rate=float(rate),
         throughput=float(thpt),
         candidates_evaluated=evaluated,
+        classes_pruned=pruned_classes,
     )
 
 
@@ -265,6 +360,7 @@ def _optimal_state(
     max_per_machine: int | None,
     batch_size: int,
     prune_symmetry: bool,
+    prune_bound: bool,
     backend: str,
 ) -> OptimalResult:
     """Vectorized engine: dense count tensors per composition class.
@@ -277,17 +373,29 @@ def _optimal_state(
     ``max_stable_rate_batch`` sweep per chunk. Scores are row-independent
     and winners are first strict maxima, so chunk boundaries cannot change
     the result and the returned placement, score and
-    ``candidates_evaluated`` match the reference engine exactly.
+    ``candidates_evaluated`` match the reference engine exactly (both
+    engines also apply the same ``_class_bound`` skips at the same class
+    boundaries with identical running bests).
     """
     n = utg.n_components
     m = cluster.n_machines
     runs = _symmetry_runs(cluster) if prune_symmetry else []
+    cir_unit = component_rates(utg, 1.0)
+    e_cm = cluster.profile.e[utg.component_types][:, cluster.machine_types]
+    met_cm = cluster.profile.met[utg.component_types][:, cluster.machine_types]
     best_etg: ExecutionGraph | None = None
     best_thpt = -1.0
     evaluated = 0
+    pruned_classes = 0
 
     for extra in _compositions_upto(max_total_tasks - n, n):
         n_inst = np.asarray(extra, dtype=np.int64) + 1
+        if prune_bound and (
+            _class_bound(n_inst, cir_unit, e_cm, met_cm, cluster.capacity)
+            <= best_thpt
+        ):
+            pruned_classes += 1
+            continue
         template = ExecutionGraph(
             utg=utg,
             n_instances=n_inst,
@@ -335,6 +443,7 @@ def _optimal_state(
         rate=float(rate),
         throughput=float(thpt),
         candidates_evaluated=evaluated,
+        classes_pruned=pruned_classes,
     )
 
 

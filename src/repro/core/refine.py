@@ -22,15 +22,22 @@ improvement keeps the trace short and deterministic).
 Engines
 -------
 ``engine="state"`` (default) runs the climb on the incremental
-``ScheduleState`` engine: moves are O(m) count-matrix deltas with
-snapshot/restore rollback (no ``ExecutionGraph`` copies), and each round's
-candidate set is scored through vectorized ``max_stable_rate_batch`` calls
-— candidate placements are exported as (B, T) task->machine matrices, so
-every candidate's score is bit-identical to the reference path's scalar
-``max_stable_rate`` and the two engines provably choose the same moves.
-``engine="reference"`` keeps the original copy-and-score implementation as
-the semantic reference for the golden equivalence tests
-(``tests/test_sched_equivalence.py``).
+``ScheduleState`` engine: moves are O(m) count-matrix deltas (no
+``ExecutionGraph`` copies), and each round's candidate set is scored
+through vectorized ``max_stable_rate_batch`` calls — candidate placements
+are exported as (B, T) task->machine matrices, greedy growth chains across
+all components/pairs advance in depth-lockstep per-row-count sweeps (4 per
+round), and every NumPy-scored candidate's score is bit-identical to the
+reference path's scalar ``max_stable_rate``, so the two engines provably
+choose the same moves. The default ``backend="auto"`` preserves that
+contract below the calibrated dispatch crossover — which covers every
+golden/equivalence-suite sweep by construction — and above it trades
+bit-exactness for the jitted JAX scorer (~1e-15 agreement: exact ties
+between moves may break differently from ``engine="reference"``, with
+equal-quality results; pass ``backend="numpy"`` to keep strict
+replayability on accelerator hosts). ``engine="reference"`` keeps the
+original copy-and-score implementation as the semantic reference for the
+golden equivalence tests (``tests/test_sched_equivalence.py``).
 
 This module is *not* part of the faithful reproduction; benchmarks report
 "proposed" (faithful Alg. 1+2) and "proposed+refine" separately. See
@@ -74,7 +81,8 @@ def refine(
     tol: float = 1e-9,
     allow_add: bool = True,
     engine: str = "state",
-    backend: str = "numpy",
+    backend: str = "auto",
+    lockstep: bool = True,
 ) -> RefineResult:
     """Hill-climb refinement of ``etg``'s placement (and instance counts).
 
@@ -89,13 +97,21 @@ def refine(
         scoring, default) or ``"reference"`` (original per-candidate
         copy-and-score path). Both produce identical results.
       backend: scoring backend for the state engine's batched closed-form
-        evaluator — ``"numpy"`` (default; bit-identical to the reference)
-        or ``"jax"`` (jitted float64, ~1e-15 relative agreement; worthwhile
-        only for very large candidate batches). Ignored by the reference
-        engine.
+        evaluator — ``"auto"`` (default: the bit-exact NumPy reference
+        below the calibrated dispatch crossover, the jitted JAX kernel for
+        large sweeps such as big-cluster RELOCATE+SWAP chunks; see
+        benchmarks/bench_dispatch.py), ``"numpy"`` (always the reference
+        floats), or ``"jax"`` (always the jitted float64 kernel, ~1e-15
+        relative agreement). Ignored by the reference engine.
+      lockstep: explore greedy growth chains in depth-lockstep sweeps (4
+        per round regardless of component count, default) instead of one
+        m-row sweep per chain step. Identical results either way; the
+        sequential path is the benchmark baseline.
     """
     if engine == "state":
-        return _refine_state(etg, cluster, max_rounds, tol, allow_add, backend)
+        return _refine_state(
+            etg, cluster, max_rounds, tol, allow_add, backend, lockstep
+        )
     if engine != "reference":
         raise ValueError(f"unknown engine {engine!r}; use 'state' or 'reference'")
     return _refine_reference(etg, cluster, max_rounds, tol, allow_add)
@@ -231,6 +247,34 @@ class _GrowCursor:
         return _GrowCursor(self.row, self.offsets)
 
 
+class _GrowChain:
+    """One greedy growth chain: its current exported row, block offsets and
+    instance-count vector, plus the placements/scores of every step so far.
+
+    After j steps, ``scores[j - 1]`` is the closed-form throughput of the
+    j-step prefix and ``placements[:j]`` is the move that realizes it —
+    uniform across single-component chains (ADD/GROW) and pair chains
+    (PAIRGROW), which fork from a single chain's prefix.
+    """
+
+    __slots__ = ("row", "offsets", "n_inst", "placements", "scores")
+
+    def __init__(self, row: np.ndarray, offsets: np.ndarray, n_inst: np.ndarray):
+        self.row = row
+        self.offsets = offsets
+        self.n_inst = n_inst
+        self.placements: list[tuple[int, int]] = []
+        self.scores: list[float] = []
+
+    def fork(self) -> "_GrowChain":
+        # Steps rebind row/offsets and copy-on-write n_inst, so forking a
+        # prefix shares the arrays and copies only the Python lists.
+        child = _GrowChain(self.row, self.offsets, self.n_inst.copy())
+        child.placements = list(self.placements)
+        child.scores = list(self.scores)
+        return child
+
+
 def _grow_step(
     state: ScheduleState, c: int, backend: str, cur: _GrowCursor
 ) -> tuple[float, int]:
@@ -260,6 +304,166 @@ def _grow_step(
     return float(scores[w]), w
 
 
+def _lockstep_extend(
+    state: ScheduleState,
+    chains: list[_GrowChain],
+    comps: list[int],
+    backend: str,
+) -> None:
+    """One lockstep depth: score every live chain's next greedy step in a
+    single per-row-count sweep and apply each chain's winner.
+
+    Chain i appends one instance of ``comps[i]``; its m candidate rows are
+    column inserts on its own row, and the whole depth scores as one
+    ``score_task_machine_batch`` call with a (B, n) count matrix (B =
+    len(chains) * m). Rows are scored independently and each chain's winner
+    is the strict first-max over its own contiguous m rows in machine
+    order, so scores and winners are bit-identical to stepping the chains
+    one ``_grow_step`` sweep at a time.
+    """
+    if not chains:
+        return
+    m = state.cluster.n_machines
+    T = int(chains[0].row.shape[0])
+    k = len(chains)
+    comps_arr = np.asarray(comps, dtype=np.int64)
+    base = np.stack([ch.row for ch in chains])           # (k, T)
+    pos = np.array(
+        [int(ch.offsets[c + 1]) for ch, c in zip(chains, comps)],
+        dtype=np.int64,
+    )  # append at end of each chain's grown block
+    counts = np.stack([ch.n_inst for ch in chains])      # (k, n)
+    counts[np.arange(k), comps_arr] += 1
+    # Insert one column at pos[i]: source column j-1 right of the insert, j
+    # left of it; the insert column itself is overwritten with the machine
+    # index, so its clipped source value is irrelevant.
+    cols = np.arange(T + 1)
+    src = np.clip(cols[None, :] - (cols[None, :] > pos[:, None]), 0, max(T - 1, 0))
+    tm = np.repeat(np.take_along_axis(base, src, axis=1), m, axis=0)
+    tm[np.arange(k * m), np.repeat(pos, m)] = np.tile(np.arange(m), k)
+    n_rows = np.repeat(counts, m, axis=0)
+    _, scores = state.score_task_machine_batch(tm, n_rows, backend=backend)
+    winners = scores.reshape(k, m).argmax(axis=1)
+    for i, (ch, c) in enumerate(zip(chains, comps)):
+        w = int(winners[i])
+        ch.row = tm[i * m + w]
+        new_off = ch.offsets.copy()
+        new_off[c + 1 :] += 1
+        ch.offsets = new_off
+        ch.n_inst[c] += 1
+        ch.placements.append((c, w))
+        ch.scores.append(float(scores[i * m + w]))
+
+
+def _growth_chains_lockstep(
+    state: ScheduleState,
+    base_tm: np.ndarray,
+    offsets: np.ndarray,
+    n_inst: np.ndarray,
+    backend: str,
+) -> tuple[list[_GrowChain], dict, dict, list[tuple[int, int]]]:
+    """Explore every greedy growth chain in four depth-lockstep sweeps.
+
+    Single chains (one per component, 4 steps each: ADD + GROW k=2/3/4) and
+    pair chains (PAIRGROW (a, b) forks off the single chain's a-step
+    prefix, then adds cj) advance together: every chain at depth d has the
+    same task total T + d, so one rectangular per-row-count sweep scores
+    all of them. A refine round's growth exploration is 4 sweeps total,
+    independent of component count — versus ~4n + 4·C(n,2) m-row sweeps
+    for the sequential path (``_growth_chains_sequential``).
+    """
+    n = state.utg.n_components
+    pairs = [(ci, cj) for ci in range(n) for cj in range(ci + 1, n)]
+    singles = [_GrowChain(base_tm, offsets, n_inst.copy()) for _ in range(n)]
+    # Depth 1: each single chain's first step (the ADD candidate).
+    _lockstep_extend(state, singles, list(range(n)), backend)
+    # PAIRGROW (1, b) forks off the 1-step prefix before depth 2 extends it.
+    pair_a = {p: singles[p[0]].fork() for p in pairs}
+    # Depth 2: singles (GROW k=2) + first cj of every (1, b) pair chain.
+    _lockstep_extend(
+        state,
+        singles + [pair_a[p] for p in pairs],
+        list(range(n)) + [cj for _, cj in pairs],
+        backend,
+    )
+    # PAIRGROW (2, b) forks off the 2-step prefix before depth 3.
+    pair_b = {p: singles[p[0]].fork() for p in pairs}
+    # Depth 3: singles (GROW k=3), second cj of (1, b), first cj of (2, b).
+    _lockstep_extend(
+        state,
+        singles + [pair_a[p] for p in pairs] + [pair_b[p] for p in pairs],
+        list(range(n)) + [cj for _, cj in pairs] * 2,
+        backend,
+    )
+    # Depth 4: singles (GROW k=4) + second cj of (2, b).
+    _lockstep_extend(
+        state,
+        singles + [pair_b[p] for p in pairs],
+        list(range(n)) + [cj for _, cj in pairs],
+        backend,
+    )
+    return singles, pair_a, pair_b, pairs
+
+
+def _growth_chains_sequential(
+    state: ScheduleState,
+    base_tm: np.ndarray,
+    offsets: np.ndarray,
+    n_inst: np.ndarray,
+    backend: str,
+) -> tuple[list[_GrowChain], dict, dict, list[tuple[int, int]]]:
+    """Sequential chain exploration (one m-row sweep per step).
+
+    The pre-lockstep state-engine path, kept for the
+    ``refine(..., lockstep=False)`` escape hatch and as the benchmark
+    baseline the lockstep speedup is measured against
+    (benchmarks/bench_refine.py). Scores and winners are bit-identical to
+    the lockstep path — rows score independently either way.
+    """
+    n = state.utg.n_components
+    pairs = [(ci, cj) for ci in range(n) for cj in range(ci + 1, n)]
+    singles = []
+    forks: list[dict[int, _GrowCursor]] = []
+    for c in range(n):
+        snap = state.snapshot()
+        cur = _GrowCursor(base_tm, offsets)
+        ch = _GrowChain(base_tm, offsets, n_inst.copy())
+        fk: dict[int, _GrowCursor] = {}
+        for step in range(1, 5):
+            sc, w = _grow_step(state, c, backend, cur)
+            ch.placements.append((c, w))
+            ch.scores.append(sc)
+            ch.n_inst[c] += 1
+            if step <= 2:
+                fk[step] = cur.copy()
+        ch.row, ch.offsets = cur.row, cur.offsets
+        state.restore(snap)
+        singles.append(ch)
+        forks.append(fk)
+    pair_a: dict[tuple[int, int], _GrowChain] = {}
+    pair_b: dict[tuple[int, int], _GrowChain] = {}
+    for ci, cj in pairs:
+        ci_chain = singles[ci]
+        for prefix, out in ((1, pair_a), (2, pair_b)):
+            snap0 = state.snapshot()
+            for c, w in ci_chain.placements[:prefix]:
+                state.add_instance(c, w)
+            cur = forks[ci][prefix].copy()
+            ch = _GrowChain(cur.row, cur.offsets, n_inst.copy())
+            ch.placements = list(ci_chain.placements[:prefix])
+            ch.scores = list(ci_chain.scores[:prefix])
+            ch.n_inst[ci] += prefix
+            for _ in range(2):
+                sc, w = _grow_step(state, cj, backend, cur)
+                ch.placements.append((cj, w))
+                ch.scores.append(sc)
+                ch.n_inst[cj] += 1
+            ch.row, ch.offsets = cur.row, cur.offsets
+            state.restore(snap0)
+            out[(ci, cj)] = ch
+    return singles, pair_a, pair_b, pairs
+
+
 def _refine_state(
     etg: ExecutionGraph,
     cluster: Cluster,
@@ -267,20 +471,22 @@ def _refine_state(
     tol: float,
     allow_add: bool,
     backend: str,
+    lockstep: bool = True,
 ) -> RefineResult:
     """Incremental-engine hill climb: identical decisions, batched scoring.
 
     Per round, every move family is expressed as edits on the flattened
     (T,) task->machine row exported from ``ScheduleState`` and scored in
     vectorized ``max_stable_rate_batch`` sweeps — one sweep covers all
-    RELOCATE+SWAP candidates, one per component covers ADD (and DROP), and
-    each greedy growth step is one m-row sweep. Candidate scores are
+    RELOCATE+SWAP candidates, four depth-lockstep per-row-count sweeps
+    cover every growth chain (ADD/GROW/PAIRGROW), and one more covers all
+    DROP candidates: ~6 sweeps per round. Candidate scores are
     bit-identical to the reference engine's scalar scoring (same
     ``max_stable_rate_batch`` row computation), and winners are selected
     with the same strict-``>`` first-max semantics in the same enumeration
     order, so both engines apply the same move sequence. Applying a move is
-    an O(m) ``ScheduleState`` delta; greedy growth exploration rolls back
-    via snapshot/restore instead of copying graphs.
+    an O(m) ``ScheduleState`` delta; growth exploration carries candidate
+    rows/counts per chain, never mutating the live state.
     """
     state = ScheduleState.from_etg(etg, cluster)
     best = _score(state.to_etg(), cluster)
@@ -366,84 +572,64 @@ def _refine_state(
             # Greedy growth is deterministic, so the reference's independent
             # greedy_grow re-runs traverse shared prefixes: one 4-step chain
             # per component yields the ADD candidate (step 1) and the
-            # GROW k=2/3/4 candidates (steps 2-4); PAIRGROW reuses the first
-            # one or two steps of the first component's chain. Chains are
-            # explored on the live state with snapshot/restore rollback.
-            # Offers still follow the reference enumeration order
-            # (ADD..., GROW..., PAIRGROW..., DROP...), which matters for
-            # exact-tie breaking under the strict-> first-max rule.
-            chains: list[
-                tuple[dict[int, float], list[tuple[int, int]], dict[int, _GrowCursor]]
-            ] = []
-            for c in range(n):
-                snap = state.snapshot()
-                cur = _GrowCursor(base_tm, offsets)
-                chain: list[tuple[int, int]] = []
-                chain_scores: dict[int, float] = {}
-                forks: dict[int, _GrowCursor] = {}
-                for step in range(1, 5):
-                    sc, w = _grow_step(state, c, backend, cur)
-                    chain.append((c, w))
-                    chain_scores[step] = sc
-                    if step <= 2:
-                        forks[step] = cur.copy()
-                state.restore(snap)
-                chains.append((chain_scores, chain, forks))
+            # GROW k=2/3/4 candidates (steps 2-4); PAIRGROW forks off the
+            # first one or two steps of the first component's chain. The
+            # lockstep explorer advances every chain together — 4
+            # per-row-count sweeps per round regardless of component count;
+            # the sequential explorer steps chains one m-row sweep at a
+            # time. Both produce bit-identical chain scores. Offers follow
+            # the reference enumeration order (ADD..., GROW..., PAIRGROW...,
+            # DROP...), which matters for exact-tie breaking under the
+            # strict-> first-max rule.
+            explore = (
+                _growth_chains_lockstep if lockstep else _growth_chains_sequential
+            )
+            singles, pair_a, pair_b, pairs = explore(
+                state, base_tm, offsets, n_inst, backend
+            )
             # ADD: the reference's first-max over machines is exactly the
             # chain's first greedy step (same scores, same argmax).
             for c in range(n):
-                chain_scores, chain, _ = chains[c]
+                ch = singles[c]
                 offer(
-                    chain_scores[1],
-                    f"add c{c}->m{chain[0][1]}",
-                    lambda p=chain[:1]: apply_adds(p),
+                    ch.scores[0],
+                    f"add c{c}->m{ch.placements[0][1]}",
+                    lambda p=ch.placements[:1]: apply_adds(p),
                 )
             # GROW: k instances of one component at once — the eq. 6
             # re-split means gains often appear only at specific counts,
             # invisible to single adds.
             for c in range(n):
-                chain_scores, chain, _ = chains[c]
+                ch = singles[c]
                 for k in (2, 3, 4):
                     offer(
-                        chain_scores[k],
+                        ch.scores[k - 1],
                         f"grow c{c}x{k}",
-                        lambda p=chain[:k]: apply_adds(p),
+                        lambda p=ch.placements[:k]: apply_adds(p),
                     )
             # PAIRGROW: components often need to grow *together* — the
             # eq. 6 re-split creates valleys between (x, y) and
-            # (x+a, y+b) that per-component moves cannot cross.
-            for ci in range(n):
-                for cj in range(ci + 1, n):
-                    snap0 = state.snapshot()
-                    _, ci_chain, forks = chains[ci]
-                    apply_adds(ci_chain[:1])               # [ci] (shared prefix)
-                    cur = forks[1].copy()
-                    snap1 = state.snapshot()
-                    sc11, w = _grow_step(state, cj, backend, cur)
-                    p11 = ci_chain[:1] + [(cj, w)]
-                    sc12, w = _grow_step(state, cj, backend, cur)
-                    p12 = p11 + [(cj, w)]
-                    state.restore(snap1)
-                    apply_adds(ci_chain[1:2])              # [ci, ci]
-                    cur = forks[2].copy()
-                    sc21, w = _grow_step(state, cj, backend, cur)
-                    p21 = ci_chain[:2] + [(cj, w)]
-                    sc22, w = _grow_step(state, cj, backend, cur)
-                    p22 = p21 + [(cj, w)]
-                    state.restore(snap0)
-                    for (a, b), (sc_ab, p_ab) in (
-                        ((1, 1), (sc11, p11)),
-                        ((2, 1), (sc21, p21)),
-                        ((1, 2), (sc12, p12)),
-                        ((2, 2), (sc22, p22)),
-                    ):
-                        offer(
-                            sc_ab,
-                            f"pairgrow c{ci}x{a}+c{cj}x{b}",
-                            lambda p=p_ab: apply_adds(p),
-                        )
-            # DROP: per component with >= 2 instances, one sweep over which
-            # instance to delete (column removal on the base row).
+            # (x+a, y+b) that per-component moves cannot cross. The (a, b)
+            # combo is the (a + b)-step prefix of the (a, ·) pair chain.
+            for ci, cj in pairs:
+                for (a, b), ch in (
+                    ((1, 1), pair_a[(ci, cj)]),
+                    ((2, 1), pair_b[(ci, cj)]),
+                    ((1, 2), pair_a[(ci, cj)]),
+                    ((2, 2), pair_b[(ci, cj)]),
+                ):
+                    offer(
+                        ch.scores[a + b - 1],
+                        f"pairgrow c{ci}x{a}+c{cj}x{b}",
+                        lambda p=ch.placements[: a + b]: apply_adds(p),
+                    )
+            # DROP: which instance to delete, over every component with
+            # >= 2 instances — column removals on the base row, all scored
+            # in one per-row-count sweep (winner still picked per component
+            # to preserve the reference offer order).
+            drop_rows: list[np.ndarray] = []
+            drop_counts: list[np.ndarray] = []
+            drop_span: list[tuple[int, int]] = []
             for c in range(n):
                 nk = int(n_inst[c])
                 if nk < 2:
@@ -452,16 +638,27 @@ def _refine_state(
                 idx = cols[None, :] + (
                     cols[None, :] >= (int(offsets[c]) + np.arange(nk))[:, None]
                 )
-                tmd = base_tm[idx]
                 n_new = n_inst.copy()
                 n_new[c] -= 1
-                _, sd = state.score_task_machine_batch(tmd, n_new, backend=backend)
-                k = int(np.argmax(sd))
-                offer(
-                    float(sd[k]),
-                    f"drop c{c}#{k}",
-                    lambda c=c, k=k: state.drop_instance(c, k),
+                drop_rows.append(base_tm[idx])
+                drop_counts.append(np.tile(n_new, (nk, 1)))
+                drop_span.append((c, nk))
+            if drop_rows:
+                _, sd_all = state.score_task_machine_batch(
+                    np.concatenate(drop_rows, axis=0),
+                    np.concatenate(drop_counts, axis=0),
+                    backend=backend,
                 )
+                start = 0
+                for c, nk in drop_span:
+                    sd = sd_all[start : start + nk]
+                    start += nk
+                    k = int(np.argmax(sd))
+                    offer(
+                        float(sd[k]),
+                        f"drop c{c}#{k}",
+                        lambda c=c, k=k: state.drop_instance(c, k),
+                    )
 
         if best_move is None:
             break

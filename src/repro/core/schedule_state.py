@@ -256,42 +256,57 @@ class ScheduleState:
         engines.
 
         Args:
-          task_machine: (B, T') candidate rows, T' = sum(n_instances).
-          n_instances: per-component counts for the candidates (defaults to
-            the current state's counts; pass a modified vector for
-            ADD/DROP/GROW-style candidates).
-          backend: ``"numpy"`` (reference floats) or ``"jax"`` (jitted
+          task_machine: (B, T') candidate rows, T' = sum of each row's
+            instance counts (every row must share one task total).
+          n_instances: per-component counts for the candidates — a shared
+            (n,) vector (defaults to the current state's counts; pass a
+            modified vector for ADD/DROP/GROW-style candidates), or a
+            (B, n) matrix giving every row its *own* counts (lockstep
+            growth chains batching different components' next steps into
+            one sweep). Per-row scores are bit-identical to scoring each
+            row against its own shared-count template.
+          backend: ``"numpy"`` (reference floats), ``"jax"`` (jitted
             float64 closed form, ~1e-15 relative agreement; falls back to
-            NumPy when JAX is unavailable).
+            NumPy when JAX is unavailable), or ``"auto"`` (JAX above the
+            calibrated element-count crossover).
         """
-        n_inst = self.n_instances if n_instances is None else n_instances
+        n_inst = self.n_instances if n_instances is None else np.asarray(
+            n_instances, dtype=np.int64
+        )
         n = self.utg.n_components
-        comp = np.repeat(np.arange(n), n_inst)
-        # Per-component division then gather: per-element operands match
-        # instance_rates()' per-task division exactly, so floats agree.
-        unit_ir = (self.cir_unit / n_inst)[comp]
         task_machine = np.asarray(task_machine, dtype=np.int64)
-        if task_machine.ndim != 2 or task_machine.shape[1] != comp.shape[0]:
+        if task_machine.ndim != 2:
             raise ValueError("task_machine must be (B, sum(n_instances))")
+        if n_inst.ndim == 2:
+            if n_inst.shape != (task_machine.shape[0], n):
+                raise ValueError("per-row n_instances must be (B, n)")
+            comp, unit_ir = cost_model.per_row_task_maps(
+                self.cir_unit, n_inst, task_machine.shape[1]
+            )                                             # each (B, T)
+            gather_comp = comp
+        else:
+            comp = np.repeat(np.arange(n), n_inst)
+            if task_machine.shape[1] != comp.shape[0]:
+                raise ValueError("task_machine must be (B, sum(n_instances))")
+            # Per-component division then gather: per-element operands match
+            # instance_rates()' per-task division exactly, so floats agree.
+            unit_ir = (self.cir_unit / n_inst)[comp]
+            gather_comp = comp[None, :]
         from repro.core.simulator import resolve_closed_form_backend
 
-        if resolve_closed_form_backend(backend) == "jax":
-            from jax.experimental import enable_x64
+        if resolve_closed_form_backend(backend, task_machine.size) == "jax":
+            from repro.core.sim_jax import closed_form_rates_jax
 
-            from repro.core.sim_jax import _msr_kernel
-
-            with enable_x64():
-                rates, thpt = _msr_kernel()(
-                    task_machine,
-                    comp,
-                    unit_ir,
-                    self.e_cm,
-                    self.met_cm,
-                    self.cluster.capacity,
-                )
-            return np.asarray(rates), np.asarray(thpt)
-        e = self.e_cm[comp[None, :], task_machine]        # (B, T)
-        met = self.met_cm[comp[None, :], task_machine]
+            return closed_form_rates_jax(
+                task_machine,
+                comp,
+                unit_ir,
+                self.e_cm,
+                self.met_cm,
+                self.cluster.capacity,
+            )
+        e = self.e_cm[gather_comp, task_machine]          # (B, T)
+        met = self.met_cm[gather_comp, task_machine]
         return cost_model.closed_form_rates(
             task_machine, e, met, unit_ir, self.cluster.capacity
         )

@@ -27,7 +27,7 @@ import numpy as np
 from repro.core.graph import ExecutionGraph
 from repro.core.profiles import Cluster
 
-__all__ = ["simulate_batch_jax", "max_stable_rate_batch_jax"]
+__all__ = ["simulate_batch_jax", "max_stable_rate_batch_jax", "closed_form_rates_jax"]
 
 _MAX_ITERS = 200
 _TOL = 1e-10
@@ -163,6 +163,18 @@ def simulate_batch_jax(
     ):
         raise ValueError("r0 must be a scalar or a (B,) vector")
     r0_b = np.broadcast_to(r0, (task_machine.shape[0],)).copy()
+    if task_machine.shape[0] == 0:
+        # Empty batch: the while-loop reductions are undefined over B=0, so
+        # short-circuit with correctly-shaped empties (matches NumPy path).
+        T, m = task_machine.shape[1], cluster.n_machines
+        empty = np.zeros((0, T), dtype=np.float64)
+        return BatchSimResult(
+            ir=empty,
+            pr=empty.copy(),
+            tcu=empty.copy(),
+            machine_util=np.zeros((0, m), dtype=np.float64),
+            throughput=np.zeros(0, dtype=np.float64),
+        )
 
     ttypes = utg.component_types
     e_cm = cluster.profile.e[ttypes][:, cluster.machine_types]      # (n, m)
@@ -186,8 +198,8 @@ def simulate_batch_jax(
 # ----------------------------------------------------- closed-form scoring
 
 
-@functools.lru_cache(maxsize=1)
-def _msr_kernel():
+@functools.lru_cache(maxsize=2)
+def _msr_kernel(per_row: bool = False):
     """Jitted closed-form max-stable-rate scorer (paper eq. 5 linearity).
 
     Mirrors ``cost_model.max_stable_rate_batch``'s NumPy math: per-machine
@@ -195,6 +207,12 @@ def _msr_kernel():
     ``R* = min_w (cap_w - met_w) / var_w``. Scatter-add association differs
     from NumPy's sequential ``np.add.at``, so agreement is ~1e-15 relative,
     not bit-exact — the NumPy backend stays the reference.
+
+    Two cached variants: ``per_row=False`` takes shared (T,) ``comp`` /
+    ``unit_ir`` maps (every row one instance-count vector — no point
+    shipping B identical copies to the device); ``per_row=True`` takes
+    (B, T) maps so rows may carry different count vectors (lockstep growth
+    batches).
     """
     import jax
     import jax.numpy as jnp
@@ -204,12 +222,13 @@ def _msr_kernel():
         B, T = task_machine.shape
         m = capacity.shape[0]
         rows = jnp.arange(B)[:, None]
-        e = e_cm[comp[None, :], task_machine]        # (B, T)
-        met = met_cm[comp[None, :], task_machine]
+        cmap = comp if per_row else comp[None, :]
+        e = e_cm[cmap, task_machine]                 # (B, T)
+        met = met_cm[cmap, task_machine]
         var_w = (
             jnp.zeros((B, m), dtype=e.dtype)
             .at[rows, task_machine]
-            .add(e * unit_ir[None, :])
+            .add(e * (unit_ir if per_row else unit_ir[None, :]))
         )
         met_w = jnp.zeros((B, m), dtype=e.dtype).at[rows, task_machine].add(met)
         head = capacity[None, :] - met_w
@@ -217,32 +236,61 @@ def _msr_kernel():
         limits = jnp.where(var_w > 0.0, head / jnp.maximum(var_w, 1e-300), jnp.inf)
         rates = jnp.clip(jnp.min(limits, axis=1), 0.0, None)
         rates = jnp.where(infeasible, 0.0, rates)
-        return rates, rates * unit_ir.sum()
+        thpt = rates * (unit_ir.sum(axis=1) if per_row else unit_ir.sum())
+        return rates, thpt
 
     return kernel
+
+
+def closed_form_rates_jax(
+    task_machine: np.ndarray,
+    comp: np.ndarray,
+    unit_ir: np.ndarray,
+    e_cm: np.ndarray,
+    met_cm: np.ndarray,
+    capacity: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray]:
+    """JAX twin of ``cost_model.closed_form_rates``.
+
+    ``comp`` / ``unit_ir`` may be (T,) shared maps or (B, T) per-row maps;
+    each shape routes to its own cached kernel variant.
+    """
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        rates, thpt = _msr_kernel(per_row=comp.ndim == 2)(
+            task_machine, comp, unit_ir, e_cm, met_cm, capacity
+        )
+    return np.asarray(rates), np.asarray(thpt)
 
 
 def max_stable_rate_batch_jax(
     etg: ExecutionGraph,
     cluster: Cluster,
     task_machine: np.ndarray,
+    n_instances: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """JAX backend for ``cost_model.max_stable_rate_batch`` (same contract)."""
-    from jax.experimental import enable_x64
-
+    """JAX backend for ``cost_model.max_stable_rate_batch`` (same contract,
+    including the optional (B, n) per-row ``n_instances`` matrix)."""
     from repro.core import cost_model
 
     utg = etg.utg
-    comp = etg.task_component()
     task_machine = np.asarray(task_machine, dtype=np.int64)
-    if task_machine.ndim != 2 or task_machine.shape[1] != comp.shape[0]:
+    if task_machine.ndim != 2:
         raise ValueError("task_machine must be (B, T)")
-    unit_ir = cost_model.instance_rates(etg, 1.0)
+    if n_instances is not None:
+        cir_unit = cost_model.component_rates(utg, 1.0)
+        comp, unit_ir = cost_model.per_row_task_maps(
+            cir_unit, n_instances, task_machine.shape[1]
+        )
+    else:
+        comp = etg.task_component()
+        if task_machine.shape[1] != comp.shape[0]:
+            raise ValueError("task_machine must be (B, T)")
+        unit_ir = cost_model.instance_rates(etg, 1.0)
     ttypes = utg.component_types
     e_cm = cluster.profile.e[ttypes][:, cluster.machine_types]
     met_cm = cluster.profile.met[ttypes][:, cluster.machine_types]
-    with enable_x64():
-        rates, thpt = _msr_kernel()(
-            task_machine, comp, unit_ir, e_cm, met_cm, cluster.capacity
-        )
-    return np.asarray(rates), np.asarray(thpt)
+    return closed_form_rates_jax(
+        task_machine, comp, unit_ir, e_cm, met_cm, cluster.capacity
+    )

@@ -112,17 +112,72 @@ def _jax_available() -> bool:
         return False
 
 
-def resolve_closed_form_backend(backend: str) -> str:
+# Element floor (B*T per sweep) below which "auto" never considers JAX for
+# the closed-form scorers, calibrated by benchmarks/bench_dispatch.py (see
+# BENCH_dispatch.json). The measured picture on a CPU-only host (2 cores):
+# the jitted scatter-add kernel is 0.2-0.4x NumPy's np.add.at accumulation
+# at *every* size up to 10M elements — XLA's CPU scatter is serial — so on
+# CPU backends "auto" always resolves to the bit-exact NumPy reference. On
+# accelerator backends (GPU/TPU, where the scatter is parallel) sweeps of
+# at least this many elements route to JAX; below it, per-call dispatch
+# dominates any win. Recalibrate with bench_dispatch.py and override via
+# REPRO_CLOSED_FORM_JAX_THRESHOLD (elements) when the measurement moves.
+_CLOSED_FORM_AUTO_THRESHOLD = 200_000
+
+
+@functools.cache
+def _jax_accelerator_available() -> bool:
+    """True iff JAX imports *and* its default backend is not the CPU."""
+    if not _jax_available():
+        return False
+    try:
+        import jax
+
+        return jax.default_backend() != "cpu"
+    except Exception:
+        return False
+
+
+def _closed_form_auto_threshold() -> float:
+    """Current "auto" crossover in elements (inf = never pick JAX).
+
+    ``REPRO_CLOSED_FORM_JAX_THRESHOLD`` overrides unconditionally (set it
+    after recalibrating bench_dispatch.py on new hardware, or to force the
+    JAX path in tests); otherwise the calibrated floor applies only when an
+    accelerator backend is present — measured CPU-only hosts never cross.
+    """
+    import os
+
+    env = os.environ.get("REPRO_CLOSED_FORM_JAX_THRESHOLD")
+    if env is not None:
+        return float(env)
+    return _CLOSED_FORM_AUTO_THRESHOLD if _jax_accelerator_available() else np.inf
+
+
+def resolve_closed_form_backend(backend: str, elements: int | None = None) -> str:
     """Validate + resolve a closed-form scoring backend request.
 
     Shared by ``cost_model.max_stable_rate_batch`` and
     ``ScheduleState.score_task_machine_batch`` so the backend-string
-    contract and the graceful JAX-missing fallback live in one place
-    (``simulate_batch`` keeps its own richer policy: it also has an
-    ``"auto"`` batch-size threshold).
+    contract, the ``"auto"`` dispatch heuristic and the graceful
+    JAX-missing fallback live in one place (``simulate_batch`` keeps its own
+    richer policy: its fixed-point loop has a different cost profile).
+
+    Args:
+      backend: ``"numpy"``, ``"jax"``, or ``"auto"`` (JAX iff the sweep
+        clears the calibrated element crossover — see
+        ``_closed_form_auto_threshold``).
+      elements: batch size in B*T elements; required for ``"auto"`` to ever
+        pick JAX (``None`` resolves to NumPy — the safe reference).
     """
-    if backend not in ("numpy", "jax"):
+    if backend not in ("numpy", "jax", "auto"):
         raise ValueError(f"unknown backend {backend!r}")
+    if backend == "auto":
+        backend = (
+            "jax"
+            if elements is not None and elements >= _closed_form_auto_threshold()
+            else "numpy"
+        )
     return "jax" if backend == "jax" and _jax_available() else "numpy"
 
 
@@ -179,6 +234,17 @@ def simulate_batch(
     r0 = np.asarray(r0, dtype=np.float64)
     if r0.ndim not in (0, 1) or (r0.ndim == 1 and r0.shape != (B,)):
         raise ValueError("r0 must be a scalar or a (B,) vector")
+    if B == 0:
+        # Empty batch: the fixed point's convergence reduction is undefined
+        # over zero rows; return correctly-shaped empties instead.
+        empty = np.zeros((0, T), dtype=np.float64)
+        return BatchSimResult(
+            ir=empty,
+            pr=empty.copy(),
+            tcu=empty.copy(),
+            machine_util=np.zeros((0, m), dtype=np.float64),
+            throughput=np.zeros(0, dtype=np.float64),
+        )
 
     ttypes = utg.component_types[comp]                # (T,)
     mtypes = cluster.machine_types[task_machine]      # (B, T)

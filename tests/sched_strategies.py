@@ -10,7 +10,7 @@ top level.
 import numpy as np
 from hypothesis import strategies as st
 
-from repro.core import UserGraph, paper_cluster, paper_profile
+from repro.core import Cluster, Profile, UserGraph, paper_cluster, paper_profile
 
 PROFILE = paper_profile()
 
@@ -38,8 +38,78 @@ def random_dag(draw, max_components: int = 6):
 
 
 @st.composite
+def random_wide_dag(draw, min_components: int = 8, max_components: int = 12):
+    """Wide, high-fan-out DAG: spout 0 feeds every middle component
+    directly (fan-out >= 6), middles optionally feed a shared sink.
+
+    The shape the lockstep growth explorer was built for: many components
+    means many simultaneous single/pair growth chains per refine round
+    (C(n, 2) pair chains at n >= 8), and a shallow graph keeps eq. 6
+    propagation from dominating the comparison.
+    """
+    n = draw(st.integers(min_components, max_components))
+    types = [0] + [draw(st.integers(1, 3)) for _ in range(n - 1)]
+    has_sink = draw(st.booleans())
+    n_mid = n - 1 - (1 if has_sink else 0)
+    edges = set((0, j) for j in range(1, n_mid + 1))
+    if has_sink:
+        sink = n - 1
+        for j in range(1, n_mid + 1):
+            if draw(st.booleans()):
+                edges.add((j, sink))
+        if not any(b == sink for _, b in edges):
+            edges.add((1, sink))
+    alpha = [1.0] + [draw(st.floats(0.25, 2.0)) for _ in range(n - 1)]
+    return UserGraph(
+        name="rand_wide",
+        component_types=np.array(types),
+        edges=tuple(sorted(edges)),
+        alpha=np.array(alpha),
+    )
+
+
+@st.composite
 def random_cluster(draw, max_per_type: int = 3):
     counts = tuple(draw(st.integers(0, max_per_type)) for _ in range(3))
     if sum(counts) == 0:
         counts = (1, 1, 1)
     return paper_cluster(counts, PROFILE)
+
+
+@st.composite
+def random_profile(draw):
+    """Random heterogeneous profiling tables (4 task types x 3 machine
+    types), replacing the paper's Table 3: per-tuple costs and MET
+    overheads drawn freely, so machine types differ in *shape* (a machine
+    fast for one task type may be slow for another), not just scale."""
+    e = np.array(
+        [[draw(st.floats(0.2, 30.0)) for _ in range(3)] for _ in range(4)]
+    )
+    e[0] *= 0.05  # spouts emit rather than process (cheap but nonzero)
+    met = np.array(
+        [[draw(st.floats(0.2, 4.0)) for _ in range(3)] for _ in range(4)]
+    )
+    return Profile(
+        e=e,
+        met=met,
+        type_names=("spout", "t1", "t2", "t3"),
+        machine_type_names=("m0", "m1", "m2"),
+    )
+
+
+@st.composite
+def random_het_cluster(draw, max_per_type: int = 2):
+    """Random heterogeneous cluster: random profile, random machine mix
+    *and* per-machine capacities (60-160 points), so capacity asymmetry —
+    not just profile asymmetry — reaches the engines."""
+    profile = draw(random_profile())
+    counts = tuple(draw(st.integers(0, max_per_type)) for _ in range(3))
+    if sum(counts) == 0:
+        counts = (1, 1, 1)
+    types = np.concatenate(
+        [np.full(c, t, dtype=np.int64) for t, c in enumerate(counts)]
+    )
+    capacity = np.array(
+        [draw(st.floats(60.0, 160.0)) for _ in range(types.shape[0])]
+    )
+    return Cluster(machine_types=types, capacity=capacity, profile=profile)

@@ -1,8 +1,11 @@
-"""Hypothesis-randomized engine equivalence: on random DAG topologies and
-random cluster shapes, the incremental/state engines must reproduce the
-reference paths *exactly* — same schedules, same moves, same candidate
-counts — extending the fixed golden scenarios in
-``test_sched_equivalence.py`` to adversarial topology shapes.
+"""Hypothesis-randomized engine equivalence: on random DAG topologies,
+random cluster shapes and random heterogeneous profiles, the
+incremental/state engines must reproduce the reference paths *exactly* —
+same schedules, same moves, same candidate counts — extending the fixed
+golden scenarios in ``test_sched_equivalence.py`` to adversarial topology
+shapes. Wide (8+ component, high fan-out) topologies specifically exercise
+the lockstep growth-chain explorer on the shapes it was built for: many
+simultaneous single/pair chains per refine round.
 """
 
 import pytest
@@ -10,7 +13,12 @@ import pytest
 pytest.importorskip("hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
 from hypothesis import given, settings
 
-from sched_strategies import random_cluster, random_dag
+from sched_strategies import (
+    random_cluster,
+    random_dag,
+    random_het_cluster,
+    random_wide_dag,
+)
 
 from repro.core import optimal_schedule, schedule
 from repro.core.refine import refine
@@ -26,6 +34,20 @@ def _sched_fingerprint(s):
     )
 
 
+def _assert_refine_engines_agree(etg, cluster, max_rounds):
+    ref = refine(etg, cluster, max_rounds=max_rounds, engine="reference")
+    state = refine(etg, cluster, max_rounds=max_rounds, engine="state")
+    seq = refine(
+        etg, cluster, max_rounds=max_rounds, engine="state", lockstep=False
+    )
+    for res in (state, seq):
+        assert res.moves == ref.moves
+        assert res.rate == ref.rate
+        assert res.throughput == ref.throughput
+        assert res.etg.n_instances.tolist() == ref.etg.n_instances.tolist()
+        assert res.etg.task_machine().tolist() == ref.etg.task_machine().tolist()
+
+
 @given(random_dag(), random_cluster())
 @settings(max_examples=25, deadline=None)
 def test_schedule_engines_agree_on_random_dags(topo, cluster):
@@ -38,13 +60,7 @@ def test_schedule_engines_agree_on_random_dags(topo, cluster):
 @settings(max_examples=10, deadline=None)
 def test_refine_engines_agree_on_random_dags(topo, cluster):
     etg = schedule(topo, cluster, r0=1.0, rate_epsilon=1.0).etg
-    ref = refine(etg, cluster, max_rounds=3, engine="reference")
-    state = refine(etg, cluster, max_rounds=3, engine="state")
-    assert state.moves == ref.moves
-    assert state.rate == ref.rate
-    assert state.throughput == ref.throughput
-    assert state.etg.n_instances.tolist() == ref.etg.n_instances.tolist()
-    assert state.etg.task_machine().tolist() == ref.etg.task_machine().tolist()
+    _assert_refine_engines_agree(etg, cluster, max_rounds=3)
 
 
 @given(random_dag(max_components=4), random_cluster(max_per_type=1))
@@ -56,5 +72,53 @@ def test_optimal_engines_agree_on_random_dags(topo, cluster):
     assert state.rate == ref.rate
     assert state.throughput == ref.throughput
     assert state.candidates_evaluated == ref.candidates_evaluated
+    assert state.classes_pruned == ref.classes_pruned
     assert state.etg.n_instances.tolist() == ref.etg.n_instances.tolist()
     assert state.etg.task_machine().tolist() == ref.etg.task_machine().tolist()
+    # The beam bound must never change the optimum it reports.
+    unbounded = optimal_schedule(
+        topo, cluster, max_total_tasks=budget, prune_bound=False
+    )
+    assert state.throughput == unbounded.throughput
+    assert state.rate == unbounded.rate
+    assert (
+        state.etg.task_machine().tolist() == unbounded.etg.task_machine().tolist()
+    )
+
+
+# ------------------------------------------- wide / heterogeneous shapes
+
+
+@given(random_wide_dag(), random_cluster(max_per_type=2))
+@settings(max_examples=10, deadline=None)
+def test_schedule_engines_agree_on_wide_dags(topo, cluster):
+    ref = schedule(topo, cluster, r0=1.0, rate_epsilon=1.0, engine="reference")
+    inc = schedule(topo, cluster, r0=1.0, rate_epsilon=1.0, engine="incremental")
+    assert _sched_fingerprint(inc) == _sched_fingerprint(ref)
+
+
+@given(random_wide_dag(max_components=10), random_cluster(max_per_type=1))
+@settings(max_examples=4, deadline=None)
+def test_refine_engines_agree_on_wide_dags(topo, cluster):
+    """8-10 components -> 28-45 simultaneous pair chains per round: the
+    lockstep explorer's batches must still replay the reference hill climb
+    move for move (and the sequential explorer must agree with both)."""
+    etg = schedule(topo, cluster, r0=1.0, rate_epsilon=1.0).etg
+    _assert_refine_engines_agree(etg, cluster, max_rounds=2)
+
+
+@given(random_dag(), random_het_cluster())
+@settings(max_examples=15, deadline=None)
+def test_schedule_engines_agree_on_heterogeneous_profiles(topo, cluster):
+    """Random profiling tables + per-machine capacities: engine agreement
+    must not depend on the paper's particular Table 3 numbers."""
+    ref = schedule(topo, cluster, r0=1.0, rate_epsilon=1.0, engine="reference")
+    inc = schedule(topo, cluster, r0=1.0, rate_epsilon=1.0, engine="incremental")
+    assert _sched_fingerprint(inc) == _sched_fingerprint(ref)
+
+
+@given(random_dag(max_components=5), random_het_cluster(max_per_type=1))
+@settings(max_examples=6, deadline=None)
+def test_refine_engines_agree_on_heterogeneous_profiles(topo, cluster):
+    etg = schedule(topo, cluster, r0=1.0, rate_epsilon=1.0).etg
+    _assert_refine_engines_agree(etg, cluster, max_rounds=2)

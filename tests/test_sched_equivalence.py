@@ -12,6 +12,9 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    Cluster,
+    Profile,
+    UserGraph,
     diamond_topology,
     linear_topology,
     max_stable_rate,
@@ -22,6 +25,7 @@ from repro.core import (
     schedule,
     simulate_batch,
     star_topology,
+    wide_fanout_topology,
 )
 from repro.core.refine import refine
 from repro.core.schedule_state import ScheduleState
@@ -130,13 +134,21 @@ def test_refine_engines_identical_no_add():
 def test_refine_slow_suite_golden():
     """Frozen expectations for the slow-suite scenario (rate_epsilon=0.05 on
     the paper's 3-worker cluster) so the fast engine is pinned even when the
-    reference comparison doesn't run."""
+    reference comparison doesn't run. ``candidates_evaluated`` and
+    ``classes_pruned`` are pinned alongside the floats: a silent regression
+    in the beam bound (pruning a class it must not, or silently pruning
+    nothing) fails loudly here instead of only shifting runtime."""
     cluster = paper_cluster((1, 1, 1))
     etg = schedule(linear_topology(), cluster, r0=1.0, rate_epsilon=0.05).etg
     res = refine(etg, cluster)
     assert res.moves == ["grow c2x3", "swap c1#0<->c3#1"]
     assert res.etg.n_instances.tolist() == [1, 1, 5, 4]
     assert res.throughput == pytest.approx(22.727405035657107, rel=1e-12)
+    opt = optimal_schedule(linear_topology(), cluster, max_total_tasks=8)
+    assert opt.candidates_evaluated == 26217  # 46089 enumerated without bound
+    assert opt.classes_pruned == 34
+    assert opt.etg.n_instances.tolist() == [1, 2, 1, 3]
+    assert opt.throughput == pytest.approx(23.268698060941833, rel=1e-12)
 
 
 @pytest.mark.parametrize("prune", [True, False])
@@ -339,3 +351,291 @@ def test_simulator_backend_fallback_and_validation():
     auto = simulate_batch(etg, cluster, tm, 1.0, backend="auto")
     ref = simulate_batch(etg, cluster, tm, 1.0, backend="numpy")
     assert np.allclose(auto.throughput, ref.throughput, rtol=1e-9)
+
+
+# ------------------------------------- wide / heterogeneous deterministic
+
+
+def het_profile_cluster() -> Cluster:
+    """Deterministic heterogeneous cluster: non-Table-3 profile shape
+    (machine types fast for some task types, slow for others) plus uneven
+    per-machine capacities."""
+    profile = Profile(
+        e=np.array(
+            [
+                [0.4, 0.9, 0.6],
+                [22.0, 6.5, 11.0],
+                [7.0, 19.0, 9.5],
+                [13.0, 10.0, 24.0],
+            ]
+        ),
+        met=np.array(
+            [
+                [0.6, 1.1, 0.8],
+                [2.4, 0.9, 1.7],
+                [1.2, 3.1, 0.7],
+                [0.8, 1.9, 2.6],
+            ]
+        ),
+        type_names=("spout", "t1", "t2", "t3"),
+        machine_type_names=("m0", "m1", "m2"),
+    )
+    return Cluster(
+        machine_types=np.array([0, 1, 1, 2]),
+        capacity=np.array([140.0, 75.0, 110.0, 90.0]),
+        profile=profile,
+    )
+
+
+def _assert_refine_engines_identical(etg, cluster, **kwargs):
+    ref = refine(etg, cluster, engine="reference", **kwargs)
+    state = refine(etg, cluster, engine="state", **kwargs)
+    seq = refine(etg, cluster, engine="state", lockstep=False, **kwargs)
+    for res in (state, seq):
+        assert res.moves == ref.moves
+        assert res.rate == ref.rate
+        assert res.throughput == ref.throughput
+        assert res.etg.n_instances.tolist() == ref.etg.n_instances.tolist()
+        assert res.etg.task_machine().tolist() == ref.etg.task_machine().tolist()
+
+
+def test_refine_engines_identical_wide_topology():
+    """10-component fan-out: 45 pair chains advance in lockstep; the batched
+    explorer must still replay the reference climb move for move, and the
+    sequential explorer must agree with both."""
+    topo = wide_fanout_topology()
+    cluster = paper_cluster((2, 1, 1))
+    etg = schedule(topo, cluster, r0=1.0, rate_epsilon=1.0).etg
+    _assert_refine_engines_identical(etg, cluster, max_rounds=3)
+
+
+def test_engines_identical_heterogeneous_profile():
+    """Engine agreement must not depend on the paper's Table 3 numbers:
+    schedule + refine replay exactly on a non-paper profile with uneven
+    per-machine capacities."""
+    cluster = het_profile_cluster()
+    for topo in (linear_topology(), wide_fanout_topology(6)):
+        ref = schedule(topo, cluster, r0=1.0, rate_epsilon=1.0,
+                       engine="reference")
+        inc = schedule(topo, cluster, r0=1.0, rate_epsilon=1.0,
+                       engine="incremental")
+        assert _fingerprint(inc) == _fingerprint(ref)
+        _assert_refine_engines_identical(inc.etg, cluster, max_rounds=2)
+
+
+# ------------------------------------------------- per-row count scoring
+
+
+def test_score_batch_per_row_counts_bit_exact():
+    """A (B, n) per-row count matrix must score every row bit-identically
+    to a shared-count call against that row's own template — the lockstep
+    chain sweeps rest on this."""
+    cluster = paper_cluster((2, 2, 2))
+    etg = schedule(diamond_topology(), cluster, r0=1.0, rate_epsilon=0.5).etg
+    state = ScheduleState.from_etg(etg, cluster)
+    rng = np.random.default_rng(23)
+    n = etg.utg.n_components
+    T = etg.total_tasks
+    B = 24
+    counts = np.tile(etg.n_instances, (B, 1))
+    counts[np.arange(B), rng.integers(0, n, size=B)] += 1   # grow one comp
+    tm = rng.integers(0, cluster.n_machines, size=(B, T + 1))
+    r_batch, t_batch = state.score_task_machine_batch(tm, counts)
+    r_cm, t_cm = max_stable_rate_batch(etg, cluster, tm, n_instances=counts)
+    assert np.array_equal(r_batch, r_cm)
+    assert np.array_equal(t_batch, t_cm)
+    for b in range(B):
+        template = state.template_etg(counts[b])
+        r_solo, t_solo = max_stable_rate_batch(template, cluster, tm[b : b + 1])
+        assert r_batch[b] == r_solo[0]
+        assert t_batch[b] == t_solo[0]
+
+
+def test_per_row_counts_validation():
+    cluster = paper_cluster((1, 1, 1))
+    etg = schedule(linear_topology(), cluster, r0=1.0, rate_epsilon=0.5).etg
+    state = ScheduleState.from_etg(etg, cluster)
+    T = etg.total_tasks
+    tm = np.zeros((2, T), dtype=np.int64)
+    bad = np.tile(etg.n_instances, (2, 1))
+    bad[1, 0] += 1  # row sums differ from T
+    with pytest.raises(ValueError, match="sum"):
+        state.score_task_machine_batch(tm, bad)
+    with pytest.raises(ValueError, match="B, n"):
+        state.score_task_machine_batch(tm, np.ones((3, 2), dtype=np.int64))
+    zero = np.tile(etg.n_instances, (2, 1))
+    zero[0, 1] = 0
+    zero[0, 2] += 1
+    with pytest.raises(ValueError, match="instance"):
+        state.score_task_machine_batch(tm, zero)
+
+
+# ------------------------------------------------------ beam bound (R*)
+
+
+@pytest.mark.parametrize("topo_fn", [linear_topology, diamond_topology])
+def test_optimal_beam_bound_exact(topo_fn):
+    """The closed-form class bound must never change the reported optimum,
+    only skip classes that cannot contain it."""
+    topo = topo_fn()
+    cluster = paper_cluster((2, 1, 1))
+    mtt = topo.n_components + 2
+    on = optimal_schedule(topo, cluster, max_total_tasks=mtt)
+    off = optimal_schedule(topo, cluster, max_total_tasks=mtt,
+                           prune_bound=False)
+    assert on.throughput == off.throughput
+    assert on.rate == off.rate
+    assert on.etg.task_machine().tolist() == off.etg.task_machine().tolist()
+    assert on.candidates_evaluated <= off.candidates_evaluated
+    assert off.classes_pruned == 0
+    # Larger budgets leave room for the bound to fire; the slow-suite
+    # golden pins exact counts on a scenario where it demonstrably does.
+    ref = optimal_schedule(topo, cluster, max_total_tasks=mtt,
+                           engine="reference")
+    assert ref.candidates_evaluated == on.candidates_evaluated
+    assert ref.classes_pruned == on.classes_pruned
+
+
+def test_optimal_beam_bound_prunes_on_het_cluster():
+    """On the heterogeneous cluster the per-task relaxation bites early:
+    whole composition classes must be skipped while the optimum and the
+    engine agreement survive."""
+    cluster = het_profile_cluster()
+    topo = linear_topology()
+    on = optimal_schedule(topo, cluster, max_total_tasks=7)
+    off = optimal_schedule(topo, cluster, max_total_tasks=7, prune_bound=False)
+    assert on.classes_pruned > 0
+    assert on.candidates_evaluated < off.candidates_evaluated
+    assert on.throughput == off.throughput
+    assert on.etg.task_machine().tolist() == off.etg.task_machine().tolist()
+
+
+# ------------------------------------------- backend parity + dispatch
+
+
+@pytest.mark.parametrize("B", [1, 2, 1000])
+def test_closed_form_backend_parity_sweep(B):
+    """NumPy vs JAX closed-form scoring across batch sizes: <= 1e-12
+    agreement and the *same* winning row, for shared and per-row counts."""
+    pytest.importorskip("jax")
+    cluster = paper_cluster((2, 2, 2))
+    etg = schedule(star_topology(), cluster, r0=1.0, rate_epsilon=0.5).etg
+    rng = np.random.default_rng(17)
+    n = etg.utg.n_components
+    T = etg.total_tasks
+    tm = rng.integers(0, cluster.n_machines, size=(B, T))
+    rn, tn = max_stable_rate_batch(etg, cluster, tm, backend="numpy")
+    rj, tj = max_stable_rate_batch(etg, cluster, tm, backend="jax")
+    assert np.allclose(rn, rj, rtol=1e-12, atol=1e-12)
+    assert np.allclose(tn, tj, rtol=1e-12, atol=1e-12)
+    assert int(np.argmax(tn)) == int(np.argmax(tj))
+    # per-row count vectors
+    counts = np.tile(etg.n_instances, (B, 1))
+    counts[np.arange(B), rng.integers(0, n, size=B)] += 1
+    tm2 = rng.integers(0, cluster.n_machines, size=(B, T + 1))
+    rn2, tn2 = max_stable_rate_batch(
+        etg, cluster, tm2, backend="numpy", n_instances=counts
+    )
+    rj2, tj2 = max_stable_rate_batch(
+        etg, cluster, tm2, backend="jax", n_instances=counts
+    )
+    assert np.allclose(rn2, rj2, rtol=1e-12, atol=1e-12)
+    assert np.allclose(tn2, tj2, rtol=1e-12, atol=1e-12)
+    assert int(np.argmax(tn2)) == int(np.argmax(tj2))
+
+
+def test_closed_form_auto_dispatch(monkeypatch):
+    """"auto" resolves to NumPy below the crossover (and always on
+    CPU-only hosts); the env override recalibrates without code changes."""
+    from repro.core.simulator import resolve_closed_form_backend
+
+    monkeypatch.delenv("REPRO_CLOSED_FORM_JAX_THRESHOLD", raising=False)
+    assert resolve_closed_form_backend("auto", None) == "numpy"
+    assert resolve_closed_form_backend("auto", 10) == "numpy"
+    with pytest.raises(ValueError, match="backend"):
+        resolve_closed_form_backend("tpu")
+    monkeypatch.setenv("REPRO_CLOSED_FORM_JAX_THRESHOLD", "100")
+    assert resolve_closed_form_backend("auto", 99) == "numpy"
+    resolved = resolve_closed_form_backend("auto", 100)
+    try:
+        import jax  # noqa: F401
+
+        assert resolved == "jax"
+    except ImportError:
+        assert resolved == "numpy"
+
+
+def test_refine_auto_backend_matches_numpy_when_forced_small(monkeypatch):
+    """With the override forcing JAX from the first element, refine's auto
+    path must still reach a schedule of identical quality (move tie-order
+    may differ at 1e-15 scoring deltas — that is the documented trade)."""
+    pytest.importorskip("jax")
+    cluster = paper_cluster((1, 1, 1))
+    etg = schedule(linear_topology(), cluster, r0=1.0, rate_epsilon=0.5).etg
+    base = refine(etg, cluster, backend="numpy")
+    monkeypatch.setenv("REPRO_CLOSED_FORM_JAX_THRESHOLD", "1")
+    forced = refine(etg, cluster, backend="auto")
+    assert forced.throughput == pytest.approx(base.throughput, rel=1e-9)
+
+
+# ------------------------------------------- simulate_batch edge cases
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_simulate_batch_empty_batch(backend):
+    """B=0 must return correctly-shaped empties, not crash the fixed
+    point's convergence reduction."""
+    if backend == "jax":
+        pytest.importorskip("jax")
+    cluster = paper_cluster((1, 1, 1))
+    etg = schedule(linear_topology(), cluster, r0=1.0, rate_epsilon=0.5).etg
+    T = etg.total_tasks
+    tm = np.zeros((0, T), dtype=np.int64)
+    res = simulate_batch(etg, cluster, tm, 1.0, backend=backend)
+    assert res.ir.shape == (0, T)
+    assert res.pr.shape == (0, T)
+    assert res.tcu.shape == (0, T)
+    assert res.machine_util.shape == (0, cluster.n_machines)
+    assert res.throughput.shape == (0,)
+    # (0,)-length per-row r0 vector is also valid for an empty batch
+    res2 = simulate_batch(etg, cluster, tm, np.zeros(0), backend=backend)
+    assert res2.throughput.shape == (0,)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_simulate_batch_single_machine_cluster(backend):
+    """m=1: every task shares the one machine; the steady state must match
+    the closed form below R* and saturate above it."""
+    if backend == "jax":
+        pytest.importorskip("jax")
+    cluster = paper_cluster((1, 0, 0))
+    assert cluster.n_machines == 1
+    etg = schedule(linear_topology(), cluster, r0=1.0, rate_epsilon=0.5).etg
+    rate, thpt = max_stable_rate(etg, cluster)
+    tm = etg.task_machine()[None, :]
+    stable = simulate_batch(etg, cluster, tm, rate * 0.9, backend=backend)
+    assert stable.machine_util.shape == (1, 1)
+    assert np.all(stable.machine_util <= cluster.capacity[None, :] + 1e-9)
+    assert stable.throughput[0] == pytest.approx(thpt * 0.9, rel=1e-6)
+    hot = simulate_batch(etg, cluster, tm, rate * 50.0, backend=backend)
+    assert np.all(hot.machine_util <= cluster.capacity[None, :] + 1e-6)
+    assert hot.throughput[0] <= stable.throughput[0] * 60.0
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_simulate_batch_length_one_rate_vector(backend):
+    """A (1,) per-row r0 vector with B=1 must behave exactly like the
+    scalar call (the degenerate broadcast the validation must admit)."""
+    if backend == "jax":
+        pytest.importorskip("jax")
+    cluster = paper_cluster((1, 1, 1))
+    etg = schedule(rolling_count_topology(), cluster, r0=1.0,
+                   rate_epsilon=0.5).etg
+    rate, _ = max_stable_rate(etg, cluster)
+    tm = etg.task_machine()[None, :]
+    vec = simulate_batch(etg, cluster, tm, np.array([rate * 2.0]),
+                         backend=backend)
+    scal = simulate_batch(etg, cluster, tm, rate * 2.0, backend=backend)
+    assert np.allclose(vec.pr, scal.pr, rtol=0, atol=0)
+    assert np.allclose(vec.machine_util, scal.machine_util, rtol=0, atol=0)
+    assert vec.throughput[0] == scal.throughput[0]
