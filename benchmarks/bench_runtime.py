@@ -1,0 +1,209 @@
+"""Online-runtime benchmark (``BENCH_runtime.json``).
+
+Executes three policies against every drift scenario in the streaming
+runtime (``repro.runtime_stream``):
+
+* **static** — a schedule provisioned for the scenario's *initial* rate
+  (``provision_schedule``, the paper's size-to-observed-load protocol),
+  then frozen for the whole trace;
+* **online** — the same starting schedule driven by ``OnlineController``
+  (windowed drift detection, incremental ``refine``-move replanning, the
+  migration cost/benefit guard);
+* **oracle** — a full ``schedule()`` re-plan at every window with free
+  migrations (``OracleRescheduler`` + ``migration_pause=0``), the
+  adaptation upper bound.
+
+The acceptance gates recorded per scenario (ISSUE 4): the online
+controller's sustained throughput must be >= the static schedule's and
+within 10% of the oracle's, with migration counts reported. The JAX
+evaluator's throughput for the static policy is cross-checked against the
+Python executor as a parity smoke.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import linear_topology, paper_cluster, schedule
+from repro.core.graph import rolling_count_topology
+from repro.core.refine import refine
+from repro.runtime_stream import (
+    OnlineController,
+    OracleRescheduler,
+    RuntimeConfig,
+    StreamExecutor,
+    evaluate_policies_batch,
+    provision_schedule,
+)
+from repro.runtime_stream.traces import (
+    TraceSpec,
+    burst_trace,
+    failure_trace,
+    machine_slowdown,
+    ramp_trace,
+    rate_ramp,
+    sine_trace,
+    slowdown_trace,
+)
+
+N_WINDOWS = 240
+SEED = 0
+# One event-loop config for every policy and scenario: a 120-tuple queue
+# bound makes sustained overload trip real back-pressure (the default 500
+# lets short transients hide entirely inside the queues).
+CONFIG = RuntimeConfig(max_queue=120.0)
+ORACLE_CONFIG = RuntimeConfig(max_queue=120.0, migration_pause=0)
+
+
+def _scenarios(topo, cluster) -> list[tuple[TraceSpec, float]]:
+    """(trace spec, provisioning rate) per drift scenario.
+
+    Rates are expressed against the cluster's maximum stable rate for the
+    topology (schedule+refine), so scenarios scale with cluster shape.
+    """
+    full = refine(schedule(topo, cluster, r0=1.0, rate_epsilon=0.05).etg, cluster)
+    r = full.rate
+    big = int(np.argmax(cluster.capacity))  # the most capable machine
+    return [
+        (ramp_trace(0.3 * r, 1.2 * r, n_windows=N_WINDOWS), 0.3 * r),
+        (burst_trace(0.5 * r, factor=3.0, n_windows=N_WINDOWS, every=60,
+                     width=20, jitter=3), 0.5 * r),
+        (sine_trace(0.65 * r, amplitude=0.45, n_windows=N_WINDOWS, period=160),
+         0.65 * r),
+        (slowdown_trace(0.9 * r, machine=big, factor=0.5, n_windows=N_WINDOWS),
+         0.9 * r),
+        (failure_trace(0.85 * r, machine=big, n_windows=N_WINDOWS), 0.85 * r),
+        (
+            TraceSpec(
+                name="ramp_slowdown",
+                n_windows=N_WINDOWS,
+                base_rate=0.4 * r,
+                events=(
+                    rate_ramp(1.1 * r, start=20, end=120),
+                    machine_slowdown(big, 0.6, start=150),
+                ),
+            ),
+            0.4 * r,
+        ),
+    ]
+
+
+def run_scenario(topo, cluster, spec: TraceSpec, provision_rate: float) -> dict:
+    trace = spec.compile(cluster, seed=SEED)
+    start_etg = provision_schedule(topo, cluster, provision_rate)
+
+    t0 = time.perf_counter()
+    static = StreamExecutor(start_etg, cluster, trace, config=CONFIG).run()
+    t_static = time.perf_counter() - t0
+
+    ctl = OnlineController(topo, cluster, period=10)
+    t0 = time.perf_counter()
+    online = StreamExecutor(start_etg, cluster, trace, config=CONFIG).run(
+        controller=ctl
+    )
+    t_online = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    oracle = StreamExecutor(
+        start_etg, cluster, trace, config=ORACLE_CONFIG
+    ).run(controller=OracleRescheduler(topo, cluster))
+    t_oracle = time.perf_counter() - t0
+
+    s_static = static.sustained_throughput()
+    s_online = online.sustained_throughput()
+    s_oracle = oracle.sustained_throughput()
+    return {
+        "scenario": trace.name,
+        "windows": trace.n_windows,
+        "provision_rate": round(provision_rate, 3),
+        "sustained_static": round(s_static, 3),
+        "sustained_online": round(s_online, 3),
+        "sustained_oracle": round(s_oracle, 3),
+        "online_vs_static": round(s_online / max(s_static, 1e-9), 3),
+        "online_vs_oracle": round(s_online / max(s_oracle, 1e-9), 3),
+        "online_migrations": int(online.migrations.sum()),
+        "online_replans": int((online.migrations > 0).sum()),
+        "oracle_migrations": int(oracle.migrations.sum()),
+        "controller_log_tail": [f"w{w}:{msg}" for w, msg in ctl.log[-3:]],
+        "beats_static": bool(s_online >= s_static),
+        "within_10pct_of_oracle": bool(s_online >= 0.9 * s_oracle),
+        "static_s": round(t_static, 3),
+        "online_s": round(t_online, 3),
+        "oracle_s": round(t_oracle, 3),
+    }
+
+
+def parity_smoke(topo, cluster) -> dict:
+    """JAX scan vs Python loop on a shared scenario (max |diff|)."""
+    full = refine(schedule(topo, cluster, r0=1.0, rate_epsilon=0.05).etg, cluster)
+    traces = [
+        ramp_trace(0.3 * full.rate, 1.5 * full.rate, n_windows=120).compile(
+            cluster, seed=1
+        ),
+        slowdown_trace(0.9 * full.rate, machine=2, n_windows=120).compile(
+            cluster, seed=2
+        ),
+    ]
+    policies = full.etg.task_machine()[None, :]
+    a = evaluate_policies_batch(full.etg, cluster, traces, policies,
+                                backend="numpy")
+    b = evaluate_policies_batch(full.etg, cluster, traces, policies,
+                                backend="auto")
+    diff = float(np.max(np.abs(a.throughput - b.throughput)))
+    try:
+        import jax  # noqa: F401
+
+        jax_used = True
+    except ImportError:
+        jax_used = False
+    return {
+        "jax_available": jax_used,
+        "max_abs_throughput_diff": diff,
+        "within_1e9": bool(diff <= 1e-9),
+    }
+
+
+def main(json_path: str | None = None) -> None:
+    cluster = paper_cluster((1, 1, 1))
+    results = {}
+    for topo_name, topo in (
+        ("linear", linear_topology()),
+        ("rolling_count", rolling_count_topology()),
+    ):
+        rows = [
+            run_scenario(topo, cluster, spec, rate)
+            for spec, rate in _scenarios(topo, cluster)
+        ]
+        results[topo_name] = rows
+        for row in rows:
+            emit(
+                f"runtime_{topo_name}_{row['scenario']}",
+                row["online_s"] * 1e6,
+                f"online={row['sustained_online']};static={row['sustained_static']};"
+                f"oracle={row['sustained_oracle']};migrations={row['online_migrations']};"
+                f"beats_static={row['beats_static']};"
+                f"within_10pct={row['within_10pct_of_oracle']}",
+            )
+    parity = parity_smoke(linear_topology(), cluster)
+    emit(
+        "runtime_eval_parity",
+        0.0,
+        f"jax={parity['jax_available']};max_diff={parity['max_abs_throughput_diff']:.2e};"
+        f"within_1e9={parity['within_1e9']}",
+    )
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"scenarios": results, "parity": parity}, f, indent=2)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--json", default=None, help="write BENCH_runtime.json here")
+    args = parser.parse_args()
+    main(json_path=args.json)

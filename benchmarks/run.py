@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   sec3   scheduler wall-time vs exhaustive optimal
   refine refine/optimal engine baseline (writes BENCH_refine.json)
   dispatch closed-form scorer backend crossover (writes BENCH_dispatch.json)
+  runtime online streaming runtime: static vs online controller vs oracle
+         on drift scenarios (writes BENCH_runtime.json)
   planner beyond-paper heterogeneous LM fleet planning
   roofline dry-run roofline aggregation (requires dry-run artifacts)
 """
@@ -24,6 +26,7 @@ from benchmarks import (
     bench_prediction,
     bench_refine,
     bench_roofline,
+    bench_runtime,
     bench_sched_speed,
     bench_throughput,
     bench_utilization,
@@ -40,6 +43,7 @@ def main() -> None:
     bench_sched_speed.main(json_path="BENCH_sched.json")
     bench_refine.main(json_path="BENCH_refine.json")
     bench_dispatch.main(json_path="BENCH_dispatch.json")
+    bench_runtime.main(json_path="BENCH_runtime.json")
     bench_planner.main()
     bench_roofline.main()
 

@@ -30,7 +30,12 @@ from repro.core.graph import (
     wide_fanout_topology,
 )
 from repro.core.maximize_throughput import Schedule, maximize_throughput, schedule
-from repro.core.metrics import gain_ratio, prediction_accuracy, weighted_utilization
+from repro.core.metrics import (
+    gain_ratio,
+    per_machine_utilization,
+    prediction_accuracy,
+    weighted_utilization,
+)
 from repro.core.optimal import OptimalResult, optimal_schedule, placement_score
 from repro.core.profiles import Cluster, Profile, paper_cluster, paper_profile
 from repro.core.refine import RefineResult, refine
@@ -57,6 +62,7 @@ __all__ = [
     "maximize_throughput",
     "schedule",
     "gain_ratio",
+    "per_machine_utilization",
     "prediction_accuracy",
     "weighted_utilization",
     "OptimalResult",

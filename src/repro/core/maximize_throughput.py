@@ -54,6 +54,23 @@ class Schedule:
     trace: list[tuple[int, str, float]]
 
 
+def _least_tcu_machine(tcu: np.ndarray, head: np.ndarray) -> int | None:
+    """Machine with the least (9-digit-quantized) TCU among those whose
+    remaining head is >= 0; ties break toward most remaining head.
+
+    The single copy of the placement tie-break rule: greedy growth (both
+    engines, via ``_greedy_place``) and the streaming runtime's
+    dead-machine evacuation select machines through this exact lexsort,
+    so the rule cannot drift between paths. Returns None when no machine
+    has head.
+    """
+    feasible = head >= 0.0
+    if not np.any(feasible):
+        return None
+    cand_tcu = np.where(feasible, tcu, np.inf)
+    return int(np.lexsort((-head, np.round(cand_tcu, 9)))[0])
+
+
 def _greedy_place(
     capacity: np.ndarray,
     base_load: np.ndarray,
@@ -73,14 +90,9 @@ def _greedy_place(
     load = base_load + existing_counts * tcu
     placed: list[int] = []
     for _ in range(k):
-        head = capacity - (load + tcu)
-        feasible = head >= 0.0
-        if not np.any(feasible):
+        w = _least_tcu_machine(tcu, capacity - (load + tcu))
+        if w is None:
             return None
-        cand_tcu = np.where(feasible, tcu, np.inf)
-        # Least TCU; ties toward most remaining capacity.
-        order = np.lexsort((-head, np.round(cand_tcu, 9)))
-        w = int(order[0])
         placed.append(w)
         load[w] += tcu[w]
     return placed

@@ -12,10 +12,25 @@ from repro.core.profiles import Cluster
 from repro.core.simulator import SimResult
 
 __all__ = [
+    "per_machine_utilization",
     "weighted_utilization",
     "prediction_accuracy",
     "gain_ratio",
 ]
+
+
+def per_machine_utilization(
+    machine: np.ndarray, tcu: np.ndarray, n_machines: int
+) -> np.ndarray:
+    """(m,) utilization per machine: sum of hosted tasks' TCU.
+
+    The one accumulation shared by eq. 7's weighting, the simulator readout
+    and the streaming runtime's windowed metrics, so "machine utilization"
+    means the same reduction everywhere.
+    """
+    util = np.zeros(n_machines, dtype=np.float64)
+    np.add.at(util, machine, tcu)
+    return util
 
 
 def weighted_utilization(
@@ -40,9 +55,7 @@ def weighted_utilization(
     x_t = x_ct.sum(axis=0)                         # eq. 8 summed over C
     x_t = x_t / x_t.sum()
 
-    util = np.zeros(cluster.n_machines, dtype=np.float64)
-    machine = etg.task_machine()
-    np.add.at(util, machine, sim.tcu)
+    util = per_machine_utilization(etg.task_machine(), sim.tcu, cluster.n_machines)
     u_bar = np.array(
         [util[cluster.machine_types == t].mean() for t in mtypes]
     )

@@ -126,6 +126,79 @@ def placement_score(etg: ExecutionGraph, cluster: Cluster) -> float:
     return float(thpt)
 
 
+def _ordered_classes(
+    utg: UserGraph,
+    max_total_tasks: int,
+    prune_bound: bool,
+    cir_unit: np.ndarray,
+    e_cm: np.ndarray,
+    met_cm: np.ndarray,
+    capacity: np.ndarray,
+) -> list[tuple[int, np.ndarray, float]]:
+    """Composition classes as (original rank, n_inst, bound) in processing
+    order.
+
+    With the beam bound active, classes are visited **best-bound-first**
+    (stable descending sort on the closed-form bound): the strongest
+    classes establish a high running best immediately, and because bounds
+    are sorted the search can stop at the first class whose bound cannot
+    beat it — every remaining class is pruned in one step. Without the
+    bound, the original enumeration order is kept (bounds are +inf).
+
+    The original rank rides along for tie-breaking: the reported optimum
+    is the same candidate the original-order search reports (see the
+    acceptance rule in the engines), so reordering is invisible in
+    results — only ``candidates_evaluated``/``classes_pruned`` move.
+    """
+    n = utg.n_components
+    vecs = [
+        np.asarray(extra, dtype=np.int64) + 1
+        for extra in _compositions_upto(max_total_tasks - n, n)
+    ]
+    if not prune_bound:
+        return [(i, v, np.inf) for i, v in enumerate(vecs)]
+    bounds = np.array(
+        [_class_bound(v, cir_unit, e_cm, met_cm, capacity) for v in vecs]
+    )
+    order = np.argsort(-bounds, kind="stable")
+    return [(int(i), vecs[i], float(bounds[i])) for i in order]
+
+
+def _incumbent_seed(
+    utg: UserGraph,
+    cluster: Cluster,
+    max_total_tasks: int,
+    max_per_machine: int | None,
+    backend: str,
+) -> tuple[ExecutionGraph, float] | None:
+    """``schedule()+refine()`` as the search's initial lower bound.
+
+    The heuristic pipeline's result is a real placement, so its throughput
+    is a valid incumbent — classes the bound proves can't beat it are
+    pruned before the first candidate is scored. Only used when the
+    incumbent actually lies inside the search space (instance budget and
+    per-machine cap), otherwise seeding could report an optimum the space
+    doesn't contain.
+    """
+    from repro.core.maximize_throughput import schedule
+    from repro.core.refine import refine
+
+    sched = schedule(utg, cluster, r0=1.0, rate_epsilon=1.0)
+    # The caller's backend is forwarded so backend="numpy" keeps the seed
+    # throughput (and hence the prune boundary and the golden candidate
+    # counts) bit-identical across hosts.
+    inc = refine(sched.etg, cluster, backend=backend)
+    if inc.etg.total_tasks > max_total_tasks:
+        return None
+    if max_per_machine is not None:
+        per_machine = np.bincount(
+            inc.etg.task_machine(), minlength=cluster.n_machines
+        )
+        if np.any(per_machine > max_per_machine):
+            return None
+    return inc.etg, float(inc.throughput)
+
+
 def _compositions(total: int, parts: int) -> Iterator[tuple[int, ...]]:
     """All ways to write ``total`` as an ordered sum of ``parts`` >= 0 ints."""
     if parts == 1:
@@ -237,6 +310,7 @@ def optimal_schedule(
     prune_bound: bool = True,
     engine: str = "state",
     backend: str = "auto",
+    seed_incumbent: bool = True,
 ) -> OptimalResult:
     """Exhaustive search. Exponential — only for small benchmark topologies.
 
@@ -256,27 +330,37 @@ def optimal_schedule(
         this re-enumerates every symmetric duplicate (for tests/audits).
       prune_bound: skip whole composition classes whose closed-form R* beam
         bound (``_class_bound``: aggregate-capacity and per-task
-        relaxations) cannot strictly beat the best throughput found so far
-        — no candidate of a pruned class is ever enumerated. Exact: the
-        returned optimum is unchanged (a pruned class contains no strict
-        improvement), and under bit-exact scoring (``backend="numpy"``, or
-        ``"auto"`` below the dispatch crossover — every test scenario) both
-        engines prune identically so ``candidates_evaluated`` still
-        matches. The engines chunk sweeps differently, so if ``"auto"``
-        resolves JAX for some sweeps (accelerator hosts, very large
-        classes) their ~1e-15 scores may break exact ties differently.
-        ``classes_pruned`` on the result counts the skips.
+        relaxations) cannot beat the best throughput found so far — no
+        candidate of a pruned class is ever enumerated. Classes are
+        visited best-bound-first and the search stops at the first class
+        whose bound falls below the running best (every later class is
+        pruned wholesale); an original-rank tie-break keeps the reported
+        placement identical to the original-order search's. Exact: the
+        returned optimum is unchanged, and under bit-exact scoring
+        (``backend="numpy"``, or ``"auto"`` below the dispatch crossover —
+        every test scenario) both engines prune identically so
+        ``candidates_evaluated`` still matches. The engines chunk sweeps
+        differently, so if ``"auto"`` resolves JAX for some sweeps
+        (accelerator hosts, very large classes) their ~1e-15 scores may
+        break exact ties differently. ``classes_pruned`` on the result
+        counts the skips.
       engine: ``"state"`` (vectorized enumeration + filters, default) or
         ``"reference"`` (original per-candidate loop). Identical results.
       backend: closed-form scoring backend forwarded to
         ``max_stable_rate_batch`` — ``"auto"`` (default: NumPy below the
         calibrated dispatch crossover, JAX above), ``"numpy"`` (the
         reference floats), or ``"jax"`` (jitted float64, ~1e-15 agreement).
+      seed_incumbent: start the beam bound from ``schedule()+refine()``'s
+        throughput (a valid lower bound — it is a real placement) so
+        pruning bites from the very first class. Only applies with
+        ``prune_bound``, and only when the incumbent lies inside the
+        search space (instance budget + per-machine cap); the reported
+        optimum is unchanged either way.
     """
     if engine == "state":
         return _optimal_state(
             utg, cluster, max_total_tasks, max_per_machine, batch_size,
-            prune_symmetry, prune_bound, backend,
+            prune_symmetry, prune_bound, backend, seed_incumbent,
         )
     if engine != "reference":
         raise ValueError(f"unknown engine {engine!r}; use 'state' or 'reference'")
@@ -288,18 +372,25 @@ def optimal_schedule(
     met_cm = cluster.profile.met[utg.component_types][:, cluster.machine_types]
     best_etg: ExecutionGraph | None = None
     best_thpt = -1.0
+    best_rank = np.inf
     evaluated = 0
     pruned_classes = 0
+    if prune_bound and seed_incumbent:
+        seeded = _incumbent_seed(utg, cluster, max_total_tasks, max_per_machine, backend)
+        if seeded is not None:
+            best_etg, best_thpt = seeded
 
-    # Enumerate instance-count vectors: each component >= 1 (paper constraint).
-    for extra in _compositions_upto(max_total_tasks - n, n):
-        n_inst = np.asarray(extra, dtype=np.int64) + 1
-        if prune_bound and (
-            _class_bound(n_inst, cir_unit, e_cm, met_cm, cluster.capacity)
-            <= best_thpt
-        ):
-            pruned_classes += 1
-            continue
+    # Composition classes (each component >= 1, the paper constraint),
+    # best-bound-first when the beam bound is on.
+    ordered = _ordered_classes(
+        utg, max_total_tasks, prune_bound, cir_unit, e_cm, met_cm,
+        cluster.capacity,
+    )
+    for pos, (rank, n_inst, bound) in enumerate(ordered):
+        if prune_bound and bound < best_thpt:
+            # Bounds are sorted descending: every remaining class is out.
+            pruned_classes += len(ordered) - pos
+            break
         template = ExecutionGraph(
             utg=utg,
             n_instances=n_inst,
@@ -310,15 +401,22 @@ def optimal_schedule(
         flat_batch: list[np.ndarray] = []
 
         def flush() -> None:
-            nonlocal best_etg, best_thpt, evaluated
+            nonlocal best_etg, best_thpt, best_rank, evaluated
             if not flat_batch:
                 return
             tm = np.stack(flat_batch, axis=0)
             _, thpt = max_stable_rate_batch(template, cluster, tm, backend=backend)
             evaluated += tm.shape[0]
             top = int(np.argmax(thpt))
-            if float(thpt[top]) > best_thpt:
+            # Strict improvement, or an exact tie from an earlier original
+            # rank: the winner is the same candidate the original-order
+            # search reports, so best-bound-first reordering (and the
+            # incumbent seed) never changes the returned placement.
+            if float(thpt[top]) > best_thpt or (
+                float(thpt[top]) == best_thpt and rank < best_rank
+            ):
                 best_thpt = float(thpt[top])
+                best_rank = rank
                 assignment, off = [], 0
                 for k in n_inst:
                     assignment.append(tm[top, off : off + int(k)].copy())
@@ -362,6 +460,7 @@ def _optimal_state(
     prune_symmetry: bool,
     prune_bound: bool,
     backend: str,
+    seed_incumbent: bool,
 ) -> OptimalResult:
     """Vectorized engine: dense count tensors per composition class.
 
@@ -385,17 +484,22 @@ def _optimal_state(
     met_cm = cluster.profile.met[utg.component_types][:, cluster.machine_types]
     best_etg: ExecutionGraph | None = None
     best_thpt = -1.0
+    best_rank = np.inf
     evaluated = 0
     pruned_classes = 0
+    if prune_bound and seed_incumbent:
+        seeded = _incumbent_seed(utg, cluster, max_total_tasks, max_per_machine, backend)
+        if seeded is not None:
+            best_etg, best_thpt = seeded
 
-    for extra in _compositions_upto(max_total_tasks - n, n):
-        n_inst = np.asarray(extra, dtype=np.int64) + 1
-        if prune_bound and (
-            _class_bound(n_inst, cir_unit, e_cm, met_cm, cluster.capacity)
-            <= best_thpt
-        ):
-            pruned_classes += 1
-            continue
+    ordered = _ordered_classes(
+        utg, max_total_tasks, prune_bound, cir_unit, e_cm, met_cm,
+        cluster.capacity,
+    )
+    for pos, (rank, n_inst, bound) in enumerate(ordered):
+        if prune_bound and bound < best_thpt:
+            pruned_classes += len(ordered) - pos
+            break
         template = ExecutionGraph(
             utg=utg,
             n_instances=n_inst,
@@ -425,8 +529,13 @@ def _optimal_state(
             _, thpt = max_stable_rate_batch(template, cluster, tm, backend=backend)
             evaluated += tm.shape[0]
             top = int(np.argmax(thpt))
-            if float(thpt[top]) > best_thpt:
+            # Same acceptance rule as the reference engine: strict
+            # improvement, or an exact tie from an earlier original rank.
+            if float(thpt[top]) > best_thpt or (
+                float(thpt[top]) == best_thpt and rank < best_rank
+            ):
                 best_thpt = float(thpt[top])
+                best_rank = rank
                 assignment, off = [], 0
                 for k in n_inst:
                     assignment.append(tm[top, off : off + int(k)].copy())

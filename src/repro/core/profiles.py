@@ -123,6 +123,23 @@ class Cluster:
     def n_machines(self) -> int:
         return int(self.machine_types.shape[0])
 
+    def with_capacity(self, capacity: np.ndarray) -> "Cluster":
+        """Same machines, different per-machine capacity vector.
+
+        The streaming runtime's drift scenarios (machine slowdown/removal)
+        re-score placements against the *instantaneous* capacity; a removed
+        machine is capacity 0.0 (the closed form then scores any placement
+        with fixed MET on it as infeasible).
+        """
+        capacity = np.asarray(capacity, dtype=np.float64)
+        if capacity.shape != self.machine_types.shape:
+            raise ValueError("capacity must align with machine_types")
+        return Cluster(
+            machine_types=self.machine_types,
+            capacity=capacity,
+            profile=self.profile,
+        )
+
     def e_for(self, task_types: np.ndarray) -> np.ndarray:
         """(len(task_types), n_machines) e matrix for concrete machines."""
         return self.profile.e[np.asarray(task_types)][:, self.machine_types]

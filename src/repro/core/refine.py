@@ -61,6 +61,11 @@ __all__ = ["RefineResult", "refine"]
 # memory on large clusters without changing results (rows are independent).
 _SCORE_CHUNK = 16_384
 
+# Total steps (prefix included) a depth-adaptive growth chain may reach —
+# a runaway backstop far above any profitable chain, shared by the lockstep
+# and sequential explorers so their stopping decisions are identical.
+_ADAPTIVE_GROW_CAP = 64
+
 
 @dataclasses.dataclass(frozen=True)
 class RefineResult:
@@ -83,6 +88,7 @@ def refine(
     engine: str = "state",
     backend: str = "auto",
     lockstep: bool = True,
+    adaptive_growth: bool = False,
 ) -> RefineResult:
     """Hill-climb refinement of ``etg``'s placement (and instance counts).
 
@@ -107,13 +113,24 @@ def refine(
         per round regardless of component count, default) instead of one
         m-row sweep per chain step. Identical results either way; the
         sequential path is the benchmark baseline.
+      adaptive_growth: keep extending growth chains past the reference
+        menu's depth 4 while their closed-form score strictly improves
+        (one extra sweep per depth), offering GROW k>4 and PAIRGROW
+        (a, b>2) candidates the fixed menu cannot see. Off by default —
+        the reference engine has no adaptive menu, so the golden
+        equivalence contract covers the default; lockstep and sequential
+        explorers produce identical adaptive results (tested). State
+        engine only.
     """
     if engine == "state":
         return _refine_state(
-            etg, cluster, max_rounds, tol, allow_add, backend, lockstep
+            etg, cluster, max_rounds, tol, allow_add, backend, lockstep,
+            adaptive_growth,
         )
     if engine != "reference":
         raise ValueError(f"unknown engine {engine!r}; use 'state' or 'reference'")
+    if adaptive_growth:
+        raise ValueError("adaptive_growth requires engine='state'")
     return _refine_reference(etg, cluster, max_rounds, tol, allow_add)
 
 
@@ -355,12 +372,62 @@ def _lockstep_extend(
         ch.scores.append(float(scores[i * m + w]))
 
 
+def _adaptive_live(chains: list[tuple[_GrowChain, int]]) -> list[tuple[_GrowChain, int]]:
+    """Chains that keep extending: last step strictly improved, cap not hit.
+
+    The stopping rule both explorers share — a chain whose deepest step did
+    not strictly beat the one before it has crossed its eq. 6 re-split
+    valley floor and stops.
+    """
+    return [
+        (ch, c)
+        for ch, c in chains
+        if len(ch.scores) < _ADAPTIVE_GROW_CAP and ch.scores[-1] > ch.scores[-2]
+    ]
+
+
+def _adaptive_extend_lockstep(
+    state: ScheduleState,
+    singles: list[_GrowChain],
+    pair_a: dict,
+    pair_b: dict,
+    pairs: list[tuple[int, int]],
+    backend: str,
+) -> None:
+    """Depth-adaptive continuation: extend every still-improving chain one
+    step per sweep until none improves.
+
+    Chains at different depths carry different task totals, so each
+    iteration groups live chains by row length and runs one per-row-count
+    sweep per group — still O(depth) sweeps per round, independent of
+    component count.
+    """
+    live = [(singles[c], c) for c in range(len(singles))]
+    live += [(pair_a[p], p[1]) for p in pairs]
+    live += [(pair_b[p], p[1]) for p in pairs]
+    while True:
+        live = _adaptive_live(live)
+        if not live:
+            return
+        groups: dict[int, list[tuple[_GrowChain, int]]] = {}
+        for ch, c in live:
+            groups.setdefault(int(ch.row.shape[0]), []).append((ch, c))
+        for length in sorted(groups):
+            _lockstep_extend(
+                state,
+                [ch for ch, _ in groups[length]],
+                [c for _, c in groups[length]],
+                backend,
+            )
+
+
 def _growth_chains_lockstep(
     state: ScheduleState,
     base_tm: np.ndarray,
     offsets: np.ndarray,
     n_inst: np.ndarray,
     backend: str,
+    adaptive: bool = False,
 ) -> tuple[list[_GrowChain], dict, dict, list[tuple[int, int]]]:
     """Explore every greedy growth chain in four depth-lockstep sweeps.
 
@@ -402,6 +469,8 @@ def _growth_chains_lockstep(
         list(range(n)) + [cj for _, cj in pairs],
         backend,
     )
+    if adaptive:
+        _adaptive_extend_lockstep(state, singles, pair_a, pair_b, pairs, backend)
     return singles, pair_a, pair_b, pairs
 
 
@@ -411,6 +480,7 @@ def _growth_chains_sequential(
     offsets: np.ndarray,
     n_inst: np.ndarray,
     backend: str,
+    adaptive: bool = False,
 ) -> tuple[list[_GrowChain], dict, dict, list[tuple[int, int]]]:
     """Sequential chain exploration (one m-row sweep per step).
 
@@ -436,6 +506,11 @@ def _growth_chains_sequential(
             ch.n_inst[c] += 1
             if step <= 2:
                 fk[step] = cur.copy()
+        while adaptive and _adaptive_live([(ch, c)]):
+            sc, w = _grow_step(state, c, backend, cur)
+            ch.placements.append((c, w))
+            ch.scores.append(sc)
+            ch.n_inst[c] += 1
         ch.row, ch.offsets = cur.row, cur.offsets
         state.restore(snap)
         singles.append(ch)
@@ -458,6 +533,11 @@ def _growth_chains_sequential(
                 ch.placements.append((cj, w))
                 ch.scores.append(sc)
                 ch.n_inst[cj] += 1
+            while adaptive and _adaptive_live([(ch, cj)]):
+                sc, w = _grow_step(state, cj, backend, cur)
+                ch.placements.append((cj, w))
+                ch.scores.append(sc)
+                ch.n_inst[cj] += 1
             ch.row, ch.offsets = cur.row, cur.offsets
             state.restore(snap0)
             out[(ci, cj)] = ch
@@ -472,6 +552,7 @@ def _refine_state(
     allow_add: bool,
     backend: str,
     lockstep: bool = True,
+    adaptive_growth: bool = False,
 ) -> RefineResult:
     """Incremental-engine hill climb: identical decisions, batched scoring.
 
@@ -585,7 +666,7 @@ def _refine_state(
                 _growth_chains_lockstep if lockstep else _growth_chains_sequential
             )
             singles, pair_a, pair_b, pairs = explore(
-                state, base_tm, offsets, n_inst, backend
+                state, base_tm, offsets, n_inst, backend, adaptive_growth
             )
             # ADD: the reference's first-max over machines is exactly the
             # chain's first greedy step (same scores, same argmax).
@@ -598,10 +679,11 @@ def _refine_state(
                 )
             # GROW: k instances of one component at once — the eq. 6
             # re-split means gains often appear only at specific counts,
-            # invisible to single adds.
+            # invisible to single adds. Adaptive chains extend the menu
+            # past k=4 for as deep as their scores kept improving.
             for c in range(n):
                 ch = singles[c]
-                for k in (2, 3, 4):
+                for k in range(2, len(ch.scores) + 1):
                     offer(
                         ch.scores[k - 1],
                         f"grow c{c}x{k}",
@@ -612,17 +694,29 @@ def _refine_state(
             # (x+a, y+b) that per-component moves cannot cross. The (a, b)
             # combo is the (a + b)-step prefix of the (a, ·) pair chain.
             for ci, cj in pairs:
+                pa, pb = pair_a[(ci, cj)], pair_b[(ci, cj)]
                 for (a, b), ch in (
-                    ((1, 1), pair_a[(ci, cj)]),
-                    ((2, 1), pair_b[(ci, cj)]),
-                    ((1, 2), pair_a[(ci, cj)]),
-                    ((2, 2), pair_b[(ci, cj)]),
+                    ((1, 1), pa),
+                    ((2, 1), pb),
+                    ((1, 2), pa),
+                    ((2, 2), pb),
                 ):
                     offer(
                         ch.scores[a + b - 1],
                         f"pairgrow c{ci}x{a}+c{cj}x{b}",
                         lambda p=ch.placements[: a + b]: apply_adds(p),
                     )
+                # Adaptive extension of the pair menu: (a, b > 2) combos
+                # for as deep as each pair chain kept improving.
+                max_b = max(len(pa.scores) - 1, len(pb.scores) - 2)
+                for b in range(3, max_b + 1):
+                    for a, ch in ((1, pa), (2, pb)):
+                        if len(ch.scores) - a >= b:
+                            offer(
+                                ch.scores[a + b - 1],
+                                f"pairgrow c{ci}x{a}+c{cj}x{b}",
+                                lambda p=ch.placements[: a + b]: apply_adds(p),
+                            )
             # DROP: which instance to delete, over every component with
             # >= 2 instances — column removals on the base row, all scored
             # in one per-row-count sweep (winner still picked per component

@@ -1,0 +1,73 @@
+"""Online streaming runtime: trace-driven execution of schedules over time.
+
+Everything before this subsystem scored and searched *static* placements;
+this package executes them against time-varying workloads:
+
+* ``traces``     — declarative workload scenarios (rate ramps, bursts,
+                   sinusoidal drift, machine slowdown/removal) compiled to
+                   dense per-window arrays by a seed;
+* ``executor``   — a deterministic windowed event loop with per-instance
+                   queues, profile-table service costs, machine saturation
+                   and spout back-pressure;
+* ``controller`` — drift detection + guarded incremental replanning on
+                   ``ScheduleState`` via ``refine``'s move set;
+* ``eval_jax``   — B traces × P policies in one ``lax.scan`` sweep,
+                   agreeing with the Python loop to ~1e-9.
+
+See docs/architecture.md (Online streaming runtime) and docs/api.md.
+"""
+
+from repro.runtime_stream.controller import (
+    OnlineController,
+    OracleRescheduler,
+    WindowObs,
+    provision_schedule,
+)
+from repro.runtime_stream.eval_jax import PolicyEvalResult, evaluate_policies_batch
+from repro.runtime_stream.executor import (
+    RuntimeConfig,
+    RuntimeResult,
+    StreamExecutor,
+    placement_migrations,
+)
+from repro.runtime_stream.traces import (
+    CompiledTrace,
+    TraceSpec,
+    burst_trace,
+    failure_trace,
+    machine_removal,
+    machine_slowdown,
+    ramp_trace,
+    rate_burst,
+    rate_noise,
+    rate_ramp,
+    rate_sine,
+    sine_trace,
+    slowdown_trace,
+)
+
+__all__ = [
+    "TraceSpec",
+    "CompiledTrace",
+    "rate_ramp",
+    "rate_burst",
+    "rate_sine",
+    "rate_noise",
+    "machine_slowdown",
+    "machine_removal",
+    "ramp_trace",
+    "burst_trace",
+    "sine_trace",
+    "slowdown_trace",
+    "failure_trace",
+    "RuntimeConfig",
+    "RuntimeResult",
+    "StreamExecutor",
+    "placement_migrations",
+    "WindowObs",
+    "OnlineController",
+    "OracleRescheduler",
+    "provision_schedule",
+    "PolicyEvalResult",
+    "evaluate_policies_batch",
+]

@@ -1,0 +1,295 @@
+"""Online rescheduler: drift detection + incremental replanning.
+
+``OnlineController`` watches the executor's windowed metrics and, when the
+workload drifts away from the current schedule's sweet spot, re-plans
+*incrementally*: instead of re-running the full scheduler from scratch it
+hands the live placement to ``refine``'s delta-scored hill climb
+(RELOCATE / SWAP / GROW / PAIRGROW / DROP on ``ScheduleState``), bounded to
+a few moves per control period, against the cluster's *instantaneous*
+capacity (``Cluster.with_capacity``). A replan is applied only when its
+projected benefit clears a migration cost/benefit guard.
+
+Drift triggers (any of):
+
+* **capacity change** — the trace slowed or removed a machine since the
+  last plan;
+* **saturation** — the spout throttle is pinned below 1 or queues sit
+  above the watermark (offered load exceeds what the placement sustains);
+* **hot machine** — some alive machine's utilization crossed
+  ``util_high`` of its capacity (the paper's over-utilization signal).
+
+Cost/benefit guard: the projected gain is the closed-form throughput
+improvement *capped by offered demand* (growing past what the trace offers
+buys nothing), integrated over ``horizon_windows``; the cost is the number
+of migrated/new instances times ``migration_cost`` tuples (state transfer
+plus the executor's migration pause). Plans that don't clear the guard are
+logged and skipped.
+
+``provision_schedule`` builds the "honest operator" baseline the
+benchmarks freeze: Algorithm 1 + just enough Algorithm-2 growth to sustain
+a target rate — the paper's protocol of sizing a schedule to the currently
+observed load, which is exactly what rate drift then invalidates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import cost_model
+from repro.core.first_assignment import first_assignment
+from repro.core.graph import ExecutionGraph, UserGraph
+from repro.core.profiles import Cluster
+from repro.core.refine import refine
+from repro.core.schedule_state import (
+    ScheduleState,
+    _grow_component_fast,
+    _hottest_component,
+)
+
+__all__ = [
+    "WindowObs",
+    "OnlineController",
+    "OracleRescheduler",
+    "provision_schedule",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowObs:
+    """What the executor shows a controller at a control point."""
+
+    window: int
+    window_s: float
+    etg: ExecutionGraph
+    capacity: np.ndarray        # (m,) instantaneous per-machine capacity
+    offered_rate: float         # trace rate this window
+    throttle: float             # spout back-pressure throttle in effect
+    machine_util: np.ndarray    # (m,) this window's utilization
+    queue_frac: float           # deepest queue / max_queue
+    queue_by_component: np.ndarray  # (n,) backlog per component
+    throughput: float
+
+
+def provision_schedule(
+    utg: UserGraph, cluster: Cluster, rate: float, margin: float = 1.05
+) -> ExecutionGraph:
+    """Smallest-effort schedule sustaining ``rate`` (× ``margin``).
+
+    Algorithm 1's minimal ETG, grown with Algorithm 2's hottest-component
+    rule (the incremental engine's closed-form growth step) only until the
+    closed-form R* covers the target — the paper's protocol of provisioning
+    for the *currently observed* rate rather than the cluster's maximum.
+    Returns the best-effort schedule even if the target is unreachable.
+    """
+    target = float(rate) * margin
+    etg = first_assignment(utg, cluster, min(target, 1.0))
+    state = ScheduleState.from_etg(etg, cluster)
+    # Progressive scale-up toward the target (Algorithm 2's regime: grow at
+    # moderate rates, not straight at the target — a single component's
+    # chunks at a far-away rate may fit on no machine even though stepped
+    # growth reaches it comfortably).
+    step_rate = state.max_stable_rate()
+    for _ in range(10_000):
+        if step_rate >= target:
+            break
+        step_rate = min(max(step_rate * 1.25, target / 64.0), target)
+        while state.max_stable_rate() < step_rate:
+            util = state.utilization(step_rate)
+            over = np.flatnonzero(cluster.capacity - util < 0.0)
+            if over.size == 0:
+                break
+            component = _hottest_component(state, int(over[0]), step_rate)
+            if _grow_component_fast(state, component, step_rate) == 0:
+                return state.to_etg()  # saturated below the target: best effort
+    return state.to_etg()
+
+
+class OnlineController:
+    """Windowed drift detector + guarded incremental rescheduler.
+
+    Args:
+      utg: the running topology.
+      cluster: the nominal cluster (capacities are overridden per
+        observation).
+      period: control period in windows.
+      max_moves: refine rounds per replan (each round applies one move, so
+        this bounds migrations per control period).
+      util_high: hot-machine trigger as a fraction of capacity.
+      queue_high: queue-fraction trigger.
+      migration_cost: tuples charged per migrated/new instance in the
+        guard (state transfer + restart downtime).
+      horizon_windows: windows the projected gain is assumed to persist
+        (the guard's amortization horizon).
+      adaptive_growth: forward refine's depth-adaptive growth menu (lets a
+        single replan grow a component past 4 instances when the closed
+        form keeps improving — useful under fast rate ramps).
+    """
+
+    def __init__(
+        self,
+        utg: UserGraph,
+        cluster: Cluster,
+        period: int = 10,
+        max_moves: int = 4,
+        util_high: float = 0.92,
+        queue_high: float = 0.25,
+        migration_cost: float = 25.0,
+        horizon_windows: int = 60,
+        adaptive_growth: bool = False,
+    ):
+        self.utg = utg
+        self.cluster = cluster
+        self.period = int(period)
+        self.max_moves = int(max_moves)
+        self.util_high = float(util_high)
+        self.queue_high = float(queue_high)
+        self.migration_cost = float(migration_cost)
+        self.horizon_windows = int(horizon_windows)
+        self.adaptive_growth = bool(adaptive_growth)
+        self._cir_sum = float(cost_model.component_rates(utg, 1.0).sum())
+        self._last_capacity: np.ndarray | None = None
+        self.log: list[tuple[int, str]] = []
+
+    # ------------------------------------------------------------ drift
+
+    def _drifted(self, obs: WindowObs) -> str | None:
+        if self._last_capacity is not None and not np.array_equal(
+            obs.capacity, self._last_capacity
+        ):
+            return "capacity"
+        if obs.throttle < 1.0 or obs.queue_frac > self.queue_high:
+            return "saturated"
+        alive = obs.capacity > 0.0
+        if np.any(obs.machine_util[alive] >= self.util_high * obs.capacity[alive]):
+            return "hot"
+        return None
+
+    # ------------------------------------------------------- evacuation
+
+    @staticmethod
+    def _evacuate(etg: ExecutionGraph, cluster_t: Cluster, rate: float) -> ExecutionGraph:
+        """Relocate every instance hosted on a capacity-0 machine.
+
+        A hill climb scoring closed-form throughput cannot escape the
+        0-throughput plateau when *several* instances sit on a dead
+        machine (no single move restores feasibility), so dead machines
+        are drained first: each stranded instance moves to the feasible
+        alive machine with the least chunk TCU (ties toward most
+        remaining head — ``_greedy_place``'s rule), and ``refine``
+        polishes from there.
+        """
+        from repro.core.maximize_throughput import _least_tcu_machine
+
+        state = ScheduleState.from_etg(etg, cluster_t)
+        dead = cluster_t.capacity <= 0.0
+        if not dead.any():
+            return etg
+        cir = cost_model.component_rates(etg.utg, rate)
+        per_inst = cir / state.n_instances
+        util = state.utilization(rate)
+        for c in range(etg.utg.n_components):
+            tcu_w = state.e_cm[c] * per_inst[c] + state.met_cm[c]
+            for k, w in enumerate(state.assignment[c]):
+                if not dead[w]:
+                    continue
+                # Dead machines get -inf head so the shared rule never
+                # picks them; when nothing fits, least-overloaded alive.
+                head = np.where(dead, -np.inf, cluster_t.capacity - util - tcu_w)
+                target = _least_tcu_machine(tcu_w, head)
+                if target is None:
+                    target = int(np.argmax(head))
+                state.relocate_instance(c, k, target)
+                util[w] -= tcu_w[w]
+                util[target] += tcu_w[target]
+        return state.to_etg()
+
+    # ----------------------------------------------------------- update
+
+    def update(self, obs: WindowObs) -> ExecutionGraph | None:
+        """Executor hook: returns a new placement or None to keep going."""
+        from repro.runtime_stream.executor import placement_migrations
+
+        reason = self._drifted(obs)
+        self._last_capacity = obs.capacity.copy()
+        if reason is None:
+            return None
+        cluster_t = self.cluster.with_capacity(obs.capacity)
+        _, cur_thpt = cost_model.max_stable_rate(obs.etg, cluster_t)
+        base = self._evacuate(obs.etg, cluster_t, obs.offered_rate)
+        plan = refine(
+            base,
+            cluster_t,
+            max_rounds=self.max_moves,
+            adaptive_growth=self.adaptive_growth,
+        )
+        moved = placement_migrations(obs.etg, plan.etg)
+        if moved == 0:
+            self.log.append((obs.window, f"{reason}:no_move"))
+            return None
+        # Gain only materializes up to what the trace offers; the window
+        # length comes from the observation (i.e. the executed trace), so
+        # the guard's tuple arithmetic can never disagree with the run.
+        demand = obs.offered_rate * self._cir_sum
+        gain_rate = min(plan.throughput, demand) - min(cur_thpt, demand)
+        benefit = gain_rate * self.horizon_windows * obs.window_s
+        cost = moved * self.migration_cost
+        if benefit <= cost:
+            self.log.append(
+                (obs.window, f"{reason}:skip gain={gain_rate:.2f}/s moves={moved}")
+            )
+            return None
+        self.log.append(
+            (obs.window, f"{reason}:replan gain={gain_rate:.2f}/s moves={moved}")
+        )
+        return plan.etg
+
+
+class OracleRescheduler:
+    """Upper-bound baseline: a full ``schedule()`` re-run at every window.
+
+    No drift detection, no cost/benefit guard — the benchmark's oracle
+    re-plans from scratch against every window's instantaneous capacity
+    (results are cached per capacity vector: ``schedule`` is deterministic
+    and rate-independent, so only capacity changes its output). Pair with
+    ``RuntimeConfig(migration_pause=0)`` for the idealized free-migration
+    oracle the ISSUE acceptance compares the controller against.
+    """
+
+    period = 1
+
+    def __init__(self, utg: UserGraph, cluster: Cluster, rate_epsilon: float = 0.05):
+        self.utg = utg
+        self.cluster = cluster
+        self.rate_epsilon = rate_epsilon
+        self._cache: dict[bytes, ExecutionGraph] = {}
+
+    def update(self, obs: WindowObs) -> ExecutionGraph | None:
+        from repro.core.maximize_throughput import schedule as _schedule
+
+        key = obs.capacity.tobytes()
+        plan = self._cache.get(key)
+        if plan is None:
+            # Algorithm 1 assumes every machine is usable, so schedule on
+            # the alive subcluster and map machine indices back.
+            alive = np.flatnonzero(obs.capacity > 0.0)
+            if alive.size == 0:
+                return None
+            sub = Cluster(
+                machine_types=self.cluster.machine_types[alive],
+                capacity=obs.capacity[alive],
+                profile=self.cluster.profile,
+            )
+            sub_plan = _schedule(
+                self.utg, sub, r0=1.0, rate_epsilon=self.rate_epsilon
+            ).etg
+            plan = ExecutionGraph(
+                utg=self.utg,
+                n_instances=sub_plan.n_instances.copy(),
+                assignment=[alive[a] for a in sub_plan.assignment],
+            )
+            self._cache[key] = plan
+        if plan.task_machine().tolist() == obs.etg.task_machine().tolist():
+            return None
+        return plan

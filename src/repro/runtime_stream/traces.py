@@ -1,0 +1,299 @@
+"""Declarative workload traces for the streaming runtime.
+
+A ``TraceSpec`` describes a time-varying workload as a base offered rate
+plus a tuple of composable *events* — rate ramps, bursts, sinusoidal
+drift, multiplicative noise, machine slowdown/removal — applied in order.
+``TraceSpec.compile(cluster, seed)`` lowers the spec to a ``CompiledTrace``:
+two dense arrays, the per-window offered spout rate ``rates`` (W,) and the
+per-window machine capacity grid ``capacity`` (W, m). Everything stochastic
+(burst jitter, rate noise) is drawn from ``np.random.default_rng(seed)``
+during compilation, so a compiled trace is a pure value: the executor and
+the JAX evaluator consume the same arrays, and repeated runs are
+bit-identical by construction.
+
+This mirrors the paper's §6.3 measurement protocol — "gradually increase
+the input rate until the cluster saturates" — as the ``rate_ramp`` event,
+and extends it with the drift/failure scenarios evaluated by the online
+controller (see docs/paper_map.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.profiles import Cluster
+
+__all__ = [
+    "TraceSpec",
+    "CompiledTrace",
+    "rate_ramp",
+    "rate_burst",
+    "rate_sine",
+    "rate_noise",
+    "machine_slowdown",
+    "machine_removal",
+    "ramp_trace",
+    "burst_trace",
+    "sine_trace",
+    "slowdown_trace",
+    "failure_trace",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledTrace:
+    """Dense per-window arrays of one workload scenario.
+
+    Attributes:
+      name: scenario name (from the spec).
+      window_s: window length in seconds (the event-loop dt).
+      rates: (W,) offered topology input rate per window (tuples/s at each
+        spout, the paper's R0 as a function of time).
+      capacity: (W, m) per-machine CPU capacity per window; 0.0 = removed.
+      events: (window, description) markers for capacity changes, for
+        event logs and plots.
+      seed: the seed the stochastic events were drawn with.
+    """
+
+    name: str
+    window_s: float
+    rates: np.ndarray
+    capacity: np.ndarray
+    events: tuple[tuple[int, str], ...]
+    seed: int
+
+    @property
+    def n_windows(self) -> int:
+        return int(self.rates.shape[0])
+
+    @property
+    def n_machines(self) -> int:
+        return int(self.capacity.shape[1])
+
+
+# ------------------------------------------------------------------ events
+
+
+@dataclasses.dataclass(frozen=True)
+class rate_ramp:
+    """Linear rate ramp from the curve's value at ``start`` to ``to_rate``
+    over [start, end); windows >= end hold ``to_rate`` (the paper's gradual
+    rate increase protocol)."""
+
+    to_rate: float
+    start: int = 0
+    end: int | None = None
+
+    def apply(self, rates: np.ndarray, capacity: np.ndarray, rng) -> list:
+        W = rates.shape[0]
+        end = W if self.end is None else min(self.end, W)
+        if end > self.start:
+            span = end - self.start
+            rates[self.start : end] = np.linspace(
+                rates[self.start], self.to_rate, span
+            )
+            rates[end:] = self.to_rate
+        return []
+
+
+@dataclasses.dataclass(frozen=True)
+class rate_burst:
+    """Multiplicative bursts: every ``every`` windows from ``start``, the
+    rate is multiplied by ``factor`` for ``width`` windows. ``jitter``
+    shifts each burst start by a seeded uniform integer in [-jitter, jitter]."""
+
+    factor: float = 3.0
+    every: int = 40
+    width: int = 5
+    start: int = 0
+    jitter: int = 0
+
+    def apply(self, rates: np.ndarray, capacity: np.ndarray, rng) -> list:
+        W = rates.shape[0]
+        for s in range(self.start, W, self.every):
+            if self.jitter:
+                s += int(rng.integers(-self.jitter, self.jitter + 1))
+            lo, hi = max(s, 0), min(max(s, 0) + self.width, W)
+            rates[lo:hi] *= self.factor
+        return []
+
+
+@dataclasses.dataclass(frozen=True)
+class rate_sine:
+    """Sinusoidal drift: ``rate *= 1 + amplitude * sin(2*pi*(t-start)/period)``
+    for windows t >= start (clipped at zero)."""
+
+    amplitude: float = 0.5
+    period: int = 60
+    start: int = 0
+
+    def apply(self, rates: np.ndarray, capacity: np.ndarray, rng) -> list:
+        W = rates.shape[0]
+        t = np.arange(W - self.start, dtype=np.float64)
+        wave = 1.0 + self.amplitude * np.sin(2.0 * np.pi * t / self.period)
+        rates[self.start :] *= np.clip(wave, 0.0, None)
+        return []
+
+
+@dataclasses.dataclass(frozen=True)
+class rate_noise:
+    """Seeded multiplicative log-normal rate noise (sigma = ``scale``)."""
+
+    scale: float = 0.05
+
+    def apply(self, rates: np.ndarray, capacity: np.ndarray, rng) -> list:
+        rates *= np.exp(rng.normal(0.0, self.scale, size=rates.shape))
+        return []
+
+
+@dataclasses.dataclass(frozen=True)
+class machine_slowdown:
+    """Machine ``machine`` runs at ``factor`` of its capacity in
+    [start, end) (end=None -> until the trace ends)."""
+
+    machine: int
+    factor: float = 0.5
+    start: int = 0
+    end: int | None = None
+
+    def apply(self, rates: np.ndarray, capacity: np.ndarray, rng) -> list:
+        W = capacity.shape[0]
+        end = W if self.end is None else min(self.end, W)
+        capacity[self.start : end, self.machine] *= self.factor
+        return [
+            (self.start, f"slowdown m{self.machine} x{self.factor}"),
+            *([(end, f"recover m{self.machine}")] if end < W else []),
+        ]
+
+
+@dataclasses.dataclass(frozen=True)
+class machine_removal:
+    """Machine ``machine`` is removed (capacity 0) in [start, end)."""
+
+    machine: int
+    start: int = 0
+    end: int | None = None
+
+    def apply(self, rates: np.ndarray, capacity: np.ndarray, rng) -> list:
+        W = capacity.shape[0]
+        end = W if self.end is None else min(self.end, W)
+        capacity[self.start : end, self.machine] = 0.0
+        return [
+            (self.start, f"remove m{self.machine}"),
+            *([(end, f"restore m{self.machine}")] if end < W else []),
+        ]
+
+
+# -------------------------------------------------------------------- spec
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """A workload scenario: base rate + ordered composable events.
+
+    ``n_windows`` fixed-length windows of ``window_s`` seconds each; the
+    offered rate starts flat at ``base_rate`` and each event transforms the
+    rate curve and/or the capacity grid in declaration order.
+    """
+
+    name: str
+    n_windows: int
+    base_rate: float
+    events: tuple = ()
+    window_s: float = 1.0
+
+    def compile(self, cluster: Cluster, seed: int = 0) -> CompiledTrace:
+        """Lower to dense (W,) rate and (W, m) capacity arrays.
+
+        All randomness (burst jitter, noise) is drawn here from
+        ``default_rng(seed)`` — the compiled trace is a pure value and
+        every consumer of it is deterministic.
+        """
+        if self.n_windows < 1:
+            raise ValueError("trace needs at least one window")
+        rng = np.random.default_rng(seed)
+        rates = np.full(self.n_windows, float(self.base_rate), dtype=np.float64)
+        capacity = np.tile(cluster.capacity, (self.n_windows, 1)).astype(np.float64)
+        markers: list[tuple[int, str]] = []
+        for ev in self.events:
+            markers.extend(ev.apply(rates, capacity, rng))
+        np.clip(rates, 0.0, None, out=rates)
+        np.clip(capacity, 0.0, None, out=capacity)
+        return CompiledTrace(
+            name=self.name,
+            window_s=float(self.window_s),
+            rates=rates,
+            capacity=capacity,
+            events=tuple(sorted(markers)),
+            seed=seed,
+        )
+
+
+# ------------------------------------------------------- stock scenarios
+
+
+def ramp_trace(
+    lo_rate: float, hi_rate: float, n_windows: int = 240, hold: int = 20
+) -> TraceSpec:
+    """The paper's gradual rate-ramp protocol: hold ``lo_rate`` for
+    ``hold`` windows, ramp linearly to ``hi_rate``, then hold."""
+    return TraceSpec(
+        name="ramp",
+        n_windows=n_windows,
+        base_rate=lo_rate,
+        events=(rate_ramp(hi_rate, start=hold, end=n_windows - hold),),
+    )
+
+
+def burst_trace(
+    base_rate: float,
+    factor: float = 3.0,
+    n_windows: int = 240,
+    every: int = 48,
+    width: int = 8,
+    jitter: int = 3,
+) -> TraceSpec:
+    """Periodic rate bursts with seeded start jitter."""
+    return TraceSpec(
+        name="burst",
+        n_windows=n_windows,
+        base_rate=base_rate,
+        events=(rate_burst(factor, every=every, width=width, start=16, jitter=jitter),),
+    )
+
+
+def sine_trace(
+    mean_rate: float, amplitude: float = 0.5, n_windows: int = 240, period: int = 80
+) -> TraceSpec:
+    """Sinusoidal diurnal-style drift around ``mean_rate``."""
+    return TraceSpec(
+        name="sine",
+        n_windows=n_windows,
+        base_rate=mean_rate,
+        events=(rate_sine(amplitude, period=period),),
+    )
+
+
+def slowdown_trace(
+    rate: float, machine: int, factor: float = 0.5, n_windows: int = 240
+) -> TraceSpec:
+    """Constant rate; ``machine`` slows to ``factor`` capacity a third of
+    the way in (resource churn without failure)."""
+    return TraceSpec(
+        name="slowdown",
+        n_windows=n_windows,
+        base_rate=rate,
+        events=(machine_slowdown(machine, factor, start=n_windows // 3),),
+    )
+
+
+def failure_trace(rate: float, machine: int, n_windows: int = 240) -> TraceSpec:
+    """Constant rate; ``machine`` is removed a third of the way in."""
+    return TraceSpec(
+        name="failure",
+        n_windows=n_windows,
+        base_rate=rate,
+        events=(machine_removal(machine, start=n_windows // 3),),
+    )

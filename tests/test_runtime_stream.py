@@ -1,0 +1,413 @@
+"""Streaming-runtime subsystem tests: trace compilation, executor
+determinism and steady-state correctness, Python-vs-JAX evaluator parity,
+and the online controller's drift handling.
+
+The acceptance gates (ISSUE 4): same seed + trace spec => bit-identical
+metrics and event log across runs; ``evaluate_policies_batch``'s JAX scan
+agrees with the Python event loop to 1e-9 on shared scenarios; the online
+controller beats the frozen static schedule under drift.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    linear_topology,
+    max_stable_rate,
+    paper_cluster,
+    predict,
+    rolling_count_topology,
+    round_robin_schedule,
+    schedule,
+)
+from repro.core.first_assignment import first_assignment
+from repro.core.refine import refine
+from repro.runtime_stream import (
+    OnlineController,
+    RuntimeConfig,
+    StreamExecutor,
+    TraceSpec,
+    burst_trace,
+    evaluate_policies_batch,
+    failure_trace,
+    machine_removal,
+    machine_slowdown,
+    placement_migrations,
+    provision_schedule,
+    ramp_trace,
+    rate_burst,
+    rate_noise,
+    rate_ramp,
+    sine_trace,
+    slowdown_trace,
+)
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    return paper_cluster((1, 1, 1))
+
+
+@pytest.fixture(scope="module")
+def refined(cluster):
+    """The slow-suite refined schedule (max stable rate ~5.68)."""
+    etg = schedule(linear_topology(), cluster, r0=1.0, rate_epsilon=0.05).etg
+    return refine(etg, cluster)
+
+
+# ------------------------------------------------------------------ traces
+
+
+def test_trace_compile_shapes_and_determinism(cluster):
+    spec = TraceSpec(
+        name="mix",
+        n_windows=120,
+        base_rate=4.0,
+        events=(
+            rate_ramp(8.0, start=10, end=60),
+            rate_burst(2.0, every=30, width=4, jitter=2),
+            rate_noise(0.05),
+            machine_slowdown(1, 0.5, start=40),
+            machine_removal(0, start=80),
+        ),
+    )
+    a = spec.compile(cluster, seed=7)
+    b = spec.compile(cluster, seed=7)
+    c = spec.compile(cluster, seed=8)
+    assert a.rates.shape == (120,)
+    assert a.capacity.shape == (120, cluster.n_machines)
+    assert np.array_equal(a.rates, b.rates)
+    assert np.array_equal(a.capacity, b.capacity)
+    assert not np.array_equal(a.rates, c.rates)  # jitter/noise are seeded
+    assert np.all(a.rates >= 0.0)
+    assert np.all(a.capacity[80:, 0] == 0.0)
+    assert np.all(a.capacity[40:, 1] == cluster.capacity[1] * 0.5)
+    assert any("remove m0" in e for _, e in a.events)
+
+
+def test_stock_scenarios_compile(cluster):
+    for spec in (
+        ramp_trace(1.0, 8.0, n_windows=60),
+        burst_trace(3.0, n_windows=60),
+        sine_trace(3.0, n_windows=60),
+        slowdown_trace(3.0, machine=2, n_windows=60),
+        failure_trace(3.0, machine=2, n_windows=60),
+    ):
+        tr = spec.compile(cluster, seed=0)
+        assert tr.n_windows == 60
+        assert np.all(tr.rates >= 0.0)
+        assert np.all(tr.capacity >= 0.0)
+
+
+def test_trace_validation(cluster):
+    with pytest.raises(ValueError, match="window"):
+        TraceSpec(name="bad", n_windows=0, base_rate=1.0).compile(cluster)
+
+
+# ---------------------------------------------------------------- executor
+
+
+def test_runtime_matches_prediction_when_stable(cluster, refined):
+    """Constant rate below R*: after the pipeline fills (one window per
+    hop), every window's throughput and machine utilization equal the
+    eq. 5/6 prediction at that rate — the runtime's correctness anchor."""
+    rate = refined.rate * 0.6
+    res = StreamExecutor(
+        refined.etg, cluster, TraceSpec(name="const", n_windows=40, base_rate=rate)
+    ).run()
+    pred = predict(refined.etg, cluster, rate)
+    depth = len(linear_topology().topo_order())
+    assert np.allclose(res.throughput[depth + 1 :], pred.throughput, rtol=1e-9)
+    assert np.allclose(res.machine_util[-1], pred.machine_util, rtol=1e-9)
+    assert np.all(res.dropped == 0.0)
+    assert np.all(res.throttle == 1.0)  # no back-pressure below R*
+    # queues drain every window at the steady state
+    assert res.queue_total[-1] < pred.throughput * res.window_s
+
+
+def test_runtime_deterministic_bit_identical(cluster, refined):
+    """Same seed + spec => bit-identical event log and metrics (ISSUE
+    acceptance gate). A different seed must actually change the run."""
+    spec = burst_trace(refined.rate * 0.8, n_windows=100, jitter=4)
+    runs = [
+        StreamExecutor(refined.etg, cluster, spec, seed=11).run() for _ in range(2)
+    ]
+    assert runs[0].fingerprint() == runs[1].fingerprint()
+    assert runs[0].events == runs[1].events
+    for field in ("throughput", "machine_util", "queue_total", "throttle"):
+        assert np.array_equal(getattr(runs[0], field), getattr(runs[1], field))
+    other = StreamExecutor(refined.etg, cluster, spec, seed=12).run()
+    assert other.fingerprint() != runs[0].fingerprint()
+
+
+def test_runtime_saturates_with_backpressure(cluster, refined):
+    """Deep overload: spout throttle engages, queues stay bounded, and
+    sustained throughput lands near the closed-form maximum (upstream
+    tasks may earn somewhat more than R* credit, eq. 2 semantics)."""
+    res = StreamExecutor(
+        refined.etg,
+        cluster,
+        TraceSpec(name="hot", n_windows=240, base_rate=refined.rate * 3.0),
+    ).run()
+    cfg = RuntimeConfig()
+    assert res.queue_max.max() <= cfg.max_queue + 1e-9
+    assert res.throttle.min() < 1.0
+    assert any("backpressure_on" in e for _, e in res.events)
+    sustained = res.sustained_throughput()
+    assert 0.7 * refined.throughput <= sustained <= 1.3 * refined.throughput
+    # capacity is respected every window on every machine
+    assert np.all(res.machine_util <= cluster.capacity[None, :] + 1e-9)
+
+
+def test_runtime_machine_removal_stalls_static_schedule(cluster, refined):
+    """Removing a machine under a frozen schedule collapses the pipeline
+    stages placed there; utilization on the dead machine reads zero."""
+    spec = failure_trace(refined.rate * 0.9, machine=2, n_windows=90)
+    res = StreamExecutor(refined.etg, cluster, spec).run()
+    kill = 30
+    assert np.all(res.machine_util[kill + 1 :, 2] == 0.0)
+    assert res.sustained_throughput(0.3) < 0.7 * res.throughput[:kill].mean()
+
+
+def test_placement_migrations_counting(cluster):
+    etg = first_assignment(linear_topology(), cluster, 1.0)
+    same = etg.copy()
+    assert placement_migrations(etg, same) == 0
+    moved = etg.copy()
+    moved.assignment[2] = np.array([(int(etg.assignment[2][0]) + 1) % 3])
+    assert placement_migrations(etg, moved) == 1
+    grown = etg.with_new_instance(3, 0)
+    assert placement_migrations(etg, grown) == 1
+
+
+# ---------------------------------------------------- batched evaluation
+
+
+def _parity_setup(cluster):
+    topo = rolling_count_topology()
+    etg = refine(schedule(topo, cluster, r0=1.0, rate_epsilon=0.05).etg, cluster).etg
+    rstar, _ = max_stable_rate(etg, cluster)
+    rr = round_robin_schedule(topo, cluster, etg.n_instances)
+    policies = np.stack([etg.task_machine(), rr.task_machine()])
+    traces = [
+        ramp_trace(0.3 * rstar, 1.5 * rstar, n_windows=120).compile(cluster, seed=1),
+        burst_trace(0.6 * rstar, n_windows=120).compile(cluster, seed=2),
+        slowdown_trace(0.9 * rstar, machine=2, n_windows=120).compile(cluster, seed=3),
+    ]
+    return etg, traces, policies
+
+
+def test_eval_backends_agree_1e9(cluster):
+    """The lax.scan evaluator must match the Python event loop within 1e-9
+    on the shared parity scenarios (ISSUE acceptance gate)."""
+    pytest.importorskip("jax")
+    etg, traces, policies = _parity_setup(cluster)
+    a = evaluate_policies_batch(etg, cluster, traces, policies, backend="numpy")
+    b = evaluate_policies_batch(etg, cluster, traces, policies, backend="jax")
+    for field in (
+        "throughput",
+        "admitted",
+        "dropped",
+        "queue_total",
+        "throttle",
+        "machine_util_mean",
+        "sustained",
+    ):
+        x, y = getattr(a, field), getattr(b, field)
+        assert np.allclose(x, y, rtol=1e-9, atol=1e-9), field
+
+
+def test_eval_numpy_matches_executor_rows(cluster):
+    """The batch evaluator's NumPy backend is literally the executor per
+    (trace, policy) pair — spot-check one cell bit-exactly."""
+    etg, traces, policies = _parity_setup(cluster)
+    res = evaluate_policies_batch(etg, cluster, traces, policies, backend="numpy")
+    b, p = 1, 0
+    comp = etg.task_component()
+    from repro.runtime_stream.eval_jax import _policy_etg
+
+    solo = StreamExecutor(_policy_etg(etg, policies[p]), cluster, traces[b]).run()
+    assert np.array_equal(res.throughput[b, p], solo.throughput)
+    assert res.sustained[b, p] == solo.sustained_throughput()
+    assert comp.shape[0] == policies.shape[1]
+
+
+def test_eval_validation_and_fallback(cluster):
+    etg, traces, policies = _parity_setup(cluster)
+    with pytest.raises(ValueError, match="backend"):
+        evaluate_policies_batch(etg, cluster, traces, policies, backend="tpu")
+    with pytest.raises(ValueError, match="P, T"):
+        evaluate_policies_batch(etg, cluster, traces, policies[:, :-1])
+    bad_idx = policies.copy()
+    bad_idx[0, 0] = -1  # would wrap silently through the gathers
+    with pytest.raises(ValueError, match="machine indices"):
+        evaluate_policies_batch(etg, cluster, traces, bad_idx)
+    with pytest.raises(ValueError, match="trace"):
+        evaluate_policies_batch(etg, cluster, [], policies)
+    short = [traces[0], traces[1]]
+    bad = TraceSpec(name="odd", n_windows=7, base_rate=1.0).compile(cluster)
+    with pytest.raises(ValueError, match="share"):
+        evaluate_policies_batch(etg, cluster, short + [bad], policies)
+    auto = evaluate_policies_batch(etg, cluster, traces[:1], policies, backend="auto")
+    ref = evaluate_policies_batch(etg, cluster, traces[:1], policies, backend="numpy")
+    assert np.allclose(auto.sustained, ref.sustained, rtol=1e-9)
+
+
+# -------------------------------------------------------------- controller
+
+
+def test_provision_schedule_sizes_to_rate(cluster):
+    topo = linear_topology()
+    lo = provision_schedule(topo, cluster, 1.0)
+    full = refine(schedule(topo, cluster, r0=1.0, rate_epsilon=0.05).etg, cluster)
+    hi = provision_schedule(topo, cluster, full.rate * 2.0)
+    r_lo, _ = max_stable_rate(lo, cluster)
+    assert r_lo >= 1.0
+    assert lo.total_tasks < hi.total_tasks  # higher target -> more instances
+    r_hi, _ = max_stable_rate(hi, cluster)
+    assert r_hi <= full.rate + 1e-9  # best effort caps at cluster saturation
+
+
+def test_controller_recovers_from_machine_failure(cluster, refined):
+    """Machine removal under the online controller: relocate off the dead
+    machine and keep most of the throughput a frozen schedule loses."""
+    topo = linear_topology()
+    spec = failure_trace(refined.rate * 0.85, machine=2, n_windows=120)
+    static = StreamExecutor(refined.etg, cluster, spec).run()
+    ctl = OnlineController(topo, cluster, period=6)
+    online = StreamExecutor(refined.etg, cluster, spec).run(controller=ctl)
+    assert online.migrations.sum() > 0
+    assert any("replan" in e for _, e in online.events)
+    assert online.sustained_throughput() > 1.2 * static.sustained_throughput()
+    # nothing left scheduled on the dead machine
+    assert np.all(online.final_etg.task_machine() != 2)
+
+
+def test_controller_grows_into_rate_ramp(cluster):
+    """The paper's protocol, online: a schedule provisioned for the early
+    rate must be grown as the rate ramps; the controller's incremental
+    replans track the oracle's full re-schedule within 10%."""
+    topo = linear_topology()
+    full = refine(schedule(topo, cluster, r0=1.0, rate_epsilon=0.05).etg, cluster)
+    prov = provision_schedule(topo, cluster, full.rate * 0.3)
+    spec = ramp_trace(full.rate * 0.3, full.rate * 1.2, n_windows=200)
+    static = StreamExecutor(prov, cluster, spec).run()
+    ctl = OnlineController(topo, cluster, period=10)
+    online = StreamExecutor(prov, cluster, spec).run(controller=ctl)
+    assert online.sustained_throughput() > 1.1 * static.sustained_throughput()
+    assert online.final_etg.total_tasks > prov.total_tasks
+    assert any("replan" in why for _, why in ctl.log)
+
+
+def test_controller_guard_rejects_pointless_migration(cluster, refined):
+    """Steady load a schedule already sustains: no migration clears the
+    cost/benefit guard, so the placement never changes."""
+    topo = linear_topology()
+    spec = TraceSpec(name="flat", n_windows=80, base_rate=refined.rate * 0.5)
+    ctl = OnlineController(topo, cluster, period=8)
+    res = StreamExecutor(refined.etg, cluster, spec).run(controller=ctl)
+    assert res.migrations.sum() == 0
+    assert res.final_etg.task_machine().tolist() == (
+        refined.etg.task_machine().tolist()
+    )
+
+
+def test_controller_migration_pause_applies(cluster):
+    """Migrated instances pause: the window right after a replan shows the
+    migration in the metrics (count recorded, events logged)."""
+    topo = linear_topology()
+    full = refine(schedule(topo, cluster, r0=1.0, rate_epsilon=0.05).etg, cluster)
+    prov = provision_schedule(topo, cluster, full.rate * 0.3)
+    spec = ramp_trace(full.rate * 0.3, full.rate * 1.2, n_windows=160)
+    cfg = RuntimeConfig(migration_pause=3)
+    ctl = OnlineController(topo, cluster, period=10)
+    res = StreamExecutor(prov, cluster, spec, config=cfg).run(controller=ctl)
+    w = int(np.flatnonzero(res.migrations)[0])
+    assert res.migrations[w] > 0
+    assert any(e == (w, f"replan:{int(res.migrations[w])}moves") for e in res.events)
+
+
+# -------------------------------------------------- adaptive growth menu
+
+
+def test_refine_adaptive_growth_flag_gated(cluster):
+    """Default-off flag: the standard menu is untouched; adaptive mode is
+    rejected on the reference engine."""
+    etg = schedule(linear_topology(), cluster, r0=1.0, rate_epsilon=0.5).etg
+    with pytest.raises(ValueError, match="adaptive_growth"):
+        refine(etg, cluster, engine="reference", adaptive_growth=True)
+
+
+def test_refine_adaptive_growth_lockstep_matches_sequential():
+    """Adaptive chains must be explorer-independent: lockstep grouped
+    sweeps and sequential stepping produce identical moves and floats
+    (the satellite's equivalence gate)."""
+    for counts, topo in (((2, 2, 2), rolling_count_topology()),
+                         ((3, 3, 3), linear_topology())):
+        cl = paper_cluster(counts)
+        etg = first_assignment(topo, cl, 1.0)
+        lock = refine(etg, cl, max_rounds=3, adaptive_growth=True)
+        seq = refine(etg, cl, max_rounds=3, adaptive_growth=True, lockstep=False)
+        assert lock.moves == seq.moves
+        assert lock.throughput == seq.throughput
+        assert lock.etg.task_machine().tolist() == seq.etg.task_machine().tolist()
+
+
+def test_refine_adaptive_growth_extends_menu():
+    """From an under-provisioned schedule with bounded rounds (the online
+    controller's regime) the adaptive menu finds deep growth moves the
+    fixed k<=4 menu cannot express, and wins."""
+    cl = paper_cluster((3, 3, 3))
+    etg = first_assignment(linear_topology(), cl, 1.0)
+    base = refine(etg, cl, max_rounds=3)
+    adaptive = refine(etg, cl, max_rounds=3, adaptive_growth=True)
+    assert adaptive.throughput > base.throughput
+    deep = [
+        m
+        for m in adaptive.moves
+        if m.startswith(("grow", "pairgrow"))
+        and any(
+            int(tok.split("x")[1]) > 4
+            for tok in m.replace("+", " ").split()
+            if "x" in tok and tok.startswith("c")
+        )
+    ]
+    assert deep, adaptive.moves
+
+
+# ------------------------------------------------------------- slow soak
+
+
+@pytest.mark.slow
+def test_runtime_soak_controller_converges(cluster):
+    """Long composite drift trace (ramp + burst + slowdown + recovery):
+    the controller must track within 10% of the oracle's full re-schedule
+    and beat the frozen static schedule."""
+    topo = linear_topology()
+    full = refine(schedule(topo, cluster, r0=1.0, rate_epsilon=0.05).etg, cluster)
+    spec = TraceSpec(
+        name="soak",
+        n_windows=600,
+        base_rate=full.rate * 0.3,
+        events=(
+            rate_ramp(full.rate * 1.1, start=40, end=240),
+            rate_burst(1.6, every=90, width=10, start=250, jitter=3),
+            machine_slowdown(2, 0.5, start=300, end=450),
+        ),
+    )
+    prov = provision_schedule(topo, cluster, full.rate * 0.3)
+    static = StreamExecutor(prov, cluster, spec).run()
+    ctl = OnlineController(topo, cluster, period=10)
+    online = StreamExecutor(prov, cluster, spec).run(controller=ctl)
+
+    from repro.runtime_stream import OracleRescheduler
+
+    cfg = RuntimeConfig(migration_pause=0)
+    oracle = StreamExecutor(prov, cluster, spec, config=cfg).run(
+        controller=OracleRescheduler(topo, cluster)
+    )
+    s_static = static.sustained_throughput()
+    s_online = online.sustained_throughput()
+    s_oracle = oracle.sustained_throughput()
+    assert s_online >= s_static
+    assert s_online >= 0.9 * s_oracle

@@ -145,8 +145,11 @@ def test_refine_slow_suite_golden():
     assert res.etg.n_instances.tolist() == [1, 1, 5, 4]
     assert res.throughput == pytest.approx(22.727405035657107, rel=1e-12)
     opt = optimal_schedule(linear_topology(), cluster, max_total_tasks=8)
-    assert opt.candidates_evaluated == 26217  # 46089 enumerated without bound
-    assert opt.classes_pruned == 34
+    # 46089 enumerated without the bound; 26217 with the pre-PR-4
+    # running-best bound; best-bound-first ordering + the
+    # schedule()+refine() incumbent seed prune one class more.
+    assert opt.candidates_evaluated == 26136
+    assert opt.classes_pruned == 35
     assert opt.etg.n_instances.tolist() == [1, 2, 1, 3]
     assert opt.throughput == pytest.approx(23.268698060941833, rel=1e-12)
 
@@ -475,8 +478,10 @@ def test_per_row_counts_validation():
 
 @pytest.mark.parametrize("topo_fn", [linear_topology, diamond_topology])
 def test_optimal_beam_bound_exact(topo_fn):
-    """The closed-form class bound must never change the reported optimum,
-    only skip classes that cannot contain it."""
+    """The closed-form class bound — now seeded with schedule()+refine()'s
+    incumbent and enumerated best-bound-first — must never change the
+    reported optimum *or placement*, only skip classes that cannot
+    contain it (the original-rank tie-break pins the winner)."""
     topo = topo_fn()
     cluster = paper_cluster((2, 1, 1))
     mtt = topo.n_components + 2
@@ -488,6 +493,12 @@ def test_optimal_beam_bound_exact(topo_fn):
     assert on.etg.task_machine().tolist() == off.etg.task_machine().tolist()
     assert on.candidates_evaluated <= off.candidates_evaluated
     assert off.classes_pruned == 0
+    # The incumbent seed prunes more (or the same), never different results.
+    unseeded = optimal_schedule(topo, cluster, max_total_tasks=mtt,
+                                seed_incumbent=False)
+    assert unseeded.throughput == on.throughput
+    assert unseeded.etg.task_machine().tolist() == on.etg.task_machine().tolist()
+    assert on.candidates_evaluated <= unseeded.candidates_evaluated
     # Larger budgets leave room for the bound to fire; the slow-suite
     # golden pins exact counts on a scenario where it demonstrably does.
     ref = optimal_schedule(topo, cluster, max_total_tasks=mtt,
