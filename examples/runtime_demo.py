@@ -13,7 +13,13 @@ migrations.
 
 import numpy as np
 
-from repro.core import linear_topology, paper_cluster, schedule
+from repro.core import (
+    keyed_rolling_count_topology,
+    linear_topology,
+    max_stable_rate,
+    paper_cluster,
+    schedule,
+)
 from repro.core.refine import refine
 from repro.runtime_stream import (
     OnlineController,
@@ -24,6 +30,7 @@ from repro.runtime_stream import (
     machine_slowdown,
     provision_schedule,
     rate_ramp,
+    skew_shift_trace,
 )
 
 
@@ -70,6 +77,39 @@ def main() -> None:
     quarters = np.array_split(online.throughput, 4)
     means = " -> ".join(f"{q.mean():.1f}" for q in quarters)
     print(f"online throughput by quarter: {means} tuples/s")
+
+    keyed_demo(cluster)
+
+
+def keyed_demo(cluster) -> None:
+    """Fields grouping with Zipf-hot keys: the even-split score
+    over-reports what the schedule sustains; the skew-aware controller
+    replans around the hot instances (and a mid-trace key-skew shift)."""
+    print("\n--- keyed streams (fields grouping, Zipf keys) ---")
+    utg = keyed_rolling_count_topology(n_keys=16, zipf_s=1.5)
+    etg = schedule(utg, cluster, r0=1.0, rate_epsilon=0.05).etg
+    cfg = RuntimeConfig(max_queue=120.0)
+
+    spec = skew_shift_trace(
+        0.95 * max_stable_rate(etg, cluster)[0], n_windows=240, zipf_s=2.0
+    )
+    probe = StreamExecutor(etg, cluster, spec, seed=0, config=cfg)
+    skew = probe.skew_model_at(0)
+    r_even, _ = max_stable_rate(etg, cluster)
+    r_skew, _ = max_stable_rate(etg, cluster, skew=skew)
+    print(f"even-split R* {r_even:.2f} vs skew-aware R* {r_skew:.2f} "
+          f"(hot keys cost {100 * (1 - r_skew / r_even):.0f}% capacity)")
+
+    static = StreamExecutor(etg, cluster, spec, seed=0, config=cfg).run()
+    ctl = OnlineController(utg, cluster, period=10)
+    online = StreamExecutor(etg, cluster, spec, seed=0, config=cfg).run(
+        controller=ctl
+    )
+    print(f"  static   {static.sustained_throughput():7.2f} tuples/s")
+    print(f"  online   {online.sustained_throughput():7.2f} tuples/s "
+          f"({int(online.migrations.sum())} migrations)")
+    for window, msg in ctl.log[:6]:
+        print(f"  window {window:3d}: {msg}")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,7 @@ Public API:
 
 from repro.core.cost_model import (
     Prediction,
+    SkewModel,
     component_rates,
     instance_rates,
     max_stable_rate,
@@ -21,8 +22,10 @@ from repro.core.cost_model import (
 from repro.core.first_assignment import first_assignment
 from repro.core.graph import (
     ExecutionGraph,
+    FieldsGrouping,
     UserGraph,
     diamond_topology,
+    keyed_rolling_count_topology,
     linear_topology,
     rolling_count_topology,
     star_topology,
@@ -50,8 +53,11 @@ __all__ = [
     "predict",
     "first_assignment",
     "ExecutionGraph",
+    "FieldsGrouping",
+    "SkewModel",
     "UserGraph",
     "diamond_topology",
+    "keyed_rolling_count_topology",
     "linear_topology",
     "rolling_count_topology",
     "star_topology",

@@ -12,6 +12,11 @@ Conventions
 * Shuffle grouping splits a component's incoming stream evenly over its
   instances (the paper's eq. 6 with uniform division), so all instances of a
   component share one input rate ``CIR_i / N_i``.
+* Fields grouping (``UserGraph.groupings``) pins each key to one instance;
+  a ``SkewModel`` carries the realized per-instance load fractions so the
+  closed form can score imbalanced placements — per-instance IR becomes
+  ``CIR_i * frac_{i,k}(N_i)`` instead of ``CIR_i / N_i``, still linear in
+  the topology input rate, so R* keeps its closed form.
 * With multiple downstream components, Storm *replicates* the output stream
   per subscribing component; within a component it is split evenly.
 """
@@ -19,6 +24,7 @@ Conventions
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable
 
 import numpy as np
 
@@ -34,6 +40,7 @@ __all__ = [
     "max_stable_rate",
     "max_stable_rate_batch",
     "per_row_task_maps",
+    "SkewModel",
 ]
 
 
@@ -54,11 +61,132 @@ def component_rates(utg: UserGraph, r0: float) -> np.ndarray:
     return cir
 
 
-def instance_rates(etg: ExecutionGraph, r0: float) -> np.ndarray:
-    """Per-task input rate IR_i (eq. 6): CIR of its component / N instances."""
+def instance_rates(
+    etg: ExecutionGraph, r0: float, skew: "SkewModel | None" = None
+) -> np.ndarray:
+    """Per-task input rate IR_i (eq. 6): CIR of its component / N instances.
+
+    With a ``skew`` model, keyed components use their realized per-instance
+    fractions instead of the even split (shuffle components unchanged).
+    """
+    if skew is not None:
+        if skew.utg is not etg.utg:
+            raise ValueError("skew model was built for a different topology")
+        return skew.per_task_unit_ir(etg.n_instances) * float(r0)
     cir = component_rates(etg.utg, r0)
     comp = etg.task_component()
     return cir[comp] / etg.n_instances[comp]
+
+
+class SkewModel:
+    """Realized fields-grouping load shape for closed-form scoring.
+
+    Built from one key realization per fields edge (drawn at trace compile
+    time — see ``runtime_stream.traces.KeyRealization``), the model answers
+    one question: what fraction of component c's input does instance k of
+    N handle? For a keyed component that is a mix of its in-edge streams —
+    shuffle edges (and spout injection) split evenly, each fields edge
+    routes by its key→hash→instance map:
+
+        frac_{c,k}(N) = even_c / N + sum_e w_e * shares_e(N)[k]
+
+    where ``w_e`` is edge e's share of the component's unit-rate CIR (a
+    rate-independent constant, eq. 6 linearity) and ``even_c`` the
+    remainder. Components without fields in-edges keep the exact eq. 6
+    even-split floats (``instance_fractions`` returns None for them), so a
+    skew-scored schedule only departs from the even-split score where keys
+    actually route.
+    """
+
+    __slots__ = ("utg", "cir_unit", "_keyed", "_frac_cache", "_unit_ir_cache")
+
+    def __init__(
+        self,
+        utg: UserGraph,
+        edge_shares: dict[tuple[int, int], Callable[[int], np.ndarray]],
+    ):
+        """Args:
+          utg: the topology (supplies groupings and alpha/CIR structure).
+          edge_shares: per fields edge, a callable mapping a downstream
+            instance count n to the (n,) tuple-share vector (e.g. a
+            ``KeyRealization.shares`` bound method). Must cover exactly
+            the UTG's fields-grouped edges.
+        """
+        want = {g.edge for g in utg.groupings}
+        if set(edge_shares) != want:
+            raise ValueError(
+                f"edge_shares must cover exactly the fields edges {sorted(want)}"
+            )
+        self.utg = utg
+        self.cir_unit = component_rates(utg, 1.0)
+        # Per keyed component: (even_weight, [(edge_weight, shares_fn), ...]).
+        self._keyed: dict[int, tuple[float, list]] = {}
+        for c in utg.keyed_components:
+            cir_c = float(self.cir_unit[c])
+            mix: list[tuple[float, Callable[[int], np.ndarray]]] = []
+            keyed_w = 0.0
+            for g in utg.groupings:
+                p, dst = g.edge
+                if dst != c:
+                    continue
+                w = (
+                    float(utg.alpha[p] * self.cir_unit[p]) / cir_c
+                    if cir_c > 0.0
+                    else 0.0
+                )
+                mix.append((w, edge_shares[g.edge]))
+                keyed_w += w
+            self._keyed[c] = (max(1.0 - keyed_w, 0.0), mix)
+        self._frac_cache: dict[tuple[int, int], np.ndarray] = {}
+        self._unit_ir_cache: dict[tuple[int, ...], np.ndarray] = {}
+
+    @property
+    def keyed_components(self) -> list[int]:
+        return sorted(self._keyed)
+
+    def instance_fractions(self, component: int, n: int) -> np.ndarray | None:
+        """(n,) input fraction per instance of ``component`` at count ``n``,
+        or None for shuffle components (use the exact eq. 6 even split)."""
+        if component not in self._keyed:
+            return None
+        key = (component, int(n))
+        frac = self._frac_cache.get(key)
+        if frac is None:
+            even_w, mix = self._keyed[component]
+            frac = np.full(int(n), even_w / int(n), dtype=np.float64)
+            for w_e, shares_fn in mix:
+                frac = frac + w_e * shares_fn(int(n))
+            self._frac_cache[key] = frac
+        return frac
+
+    def per_task_unit_ir(self, n_instances: np.ndarray) -> np.ndarray:
+        """(T,) per-task input rate at unit topology rate for an (n,)
+        instance-count vector (paper eq. 3 task order)."""
+        key = tuple(int(k) for k in np.asarray(n_instances))
+        out = self._unit_ir_cache.get(key)
+        if out is None:
+            parts = []
+            for c, nk in enumerate(key):
+                frac = self.instance_fractions(c, nk)
+                if frac is None:
+                    # Same division the even-split path performs, so shuffle
+                    # components' floats agree exactly.
+                    parts.append(np.full(nk, self.cir_unit[c] / nk))
+                else:
+                    parts.append(self.cir_unit[c] * frac)
+            out = np.concatenate(parts) if parts else np.zeros(0)
+            self._unit_ir_cache[key] = out
+        return out
+
+    def per_row_unit_ir(self, n_instances: np.ndarray) -> np.ndarray:
+        """(B, T) per-task unit input rates for a (B, n) count matrix
+        (every row must share one task total)."""
+        n_instances = np.asarray(n_instances, dtype=np.int64)
+        uniq, inverse = np.unique(n_instances, axis=0, return_inverse=True)
+        rows = np.stack([self.per_task_unit_ir(u) for u in uniq])
+        # reshape: np.unique's inverse shape for axis=0 varies across
+        # NumPy 2.x minors (flat vs shaped); flat indexing works on all.
+        return rows[inverse.reshape(-1)]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,7 +243,9 @@ def predict(etg: ExecutionGraph, cluster: Cluster, r0: float) -> Prediction:
     )
 
 
-def max_stable_rate(etg: ExecutionGraph, cluster: Cluster) -> tuple[float, float]:
+def max_stable_rate(
+    etg: ExecutionGraph, cluster: Cluster, skew: SkewModel | None = None
+) -> tuple[float, float]:
     """Largest topology input rate with every MAC_w >= 0, and its throughput.
 
     Because eq. 5/6 are linear in the topology input rate R, the per-machine
@@ -127,9 +257,13 @@ def max_stable_rate(etg: ExecutionGraph, cluster: Cluster) -> tuple[float, float
     Returns (R*, throughput at R*) where throughput is the paper's objective
     (eq. 2): the sum of all task processing rates. A placement whose fixed
     MET overhead alone exceeds some machine's capacity is infeasible at any
-    rate -> (0.0, 0.0).
+    rate -> (0.0, 0.0). A ``skew`` model replaces keyed components' even
+    split with their realized per-instance fractions (still linear in R, so
+    the closed form is exact — the skew-aware utilization bound).
     """
-    rate, thpt = max_stable_rate_batch(etg, cluster, etg.task_machine()[None, :])
+    rate, thpt = max_stable_rate_batch(
+        etg, cluster, etg.task_machine()[None, :], skew=skew
+    )
     return float(rate[0]), float(thpt[0])
 
 
@@ -188,6 +322,7 @@ def max_stable_rate_batch(
     task_machine: np.ndarray,
     backend: str = "numpy",
     n_instances: np.ndarray | None = None,
+    skew: SkewModel | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Vectorized ``max_stable_rate`` over B placements.
 
@@ -202,6 +337,10 @@ def max_stable_rate_batch(
       n_instances: optional (B, n) per-row instance-count matrix overriding
         ``etg.n_instances`` row by row (every row must sum to T). Lets one
         sweep score candidates that grow/shrink *different* components.
+      skew: optional fields-grouping load model; keyed components score at
+        their realized per-instance fractions instead of the even split.
+        Skew scoring always runs the NumPy reference floats (the jitted
+        kernel has no skew path).
 
     Returns:
       (rates, throughputs), each (B,).
@@ -209,6 +348,26 @@ def max_stable_rate_batch(
     from repro.core.simulator import resolve_closed_form_backend
 
     task_machine = np.asarray(task_machine, dtype=np.int64)
+    if skew is not None:
+        if skew.utg is not etg.utg:
+            raise ValueError("skew model was built for a different topology")
+        if task_machine.ndim != 2:
+            raise ValueError("task_machine must be (B, T)")
+        if n_instances is not None:
+            n_inst_bn = np.asarray(n_instances, dtype=np.int64)
+            comp, _ = per_row_task_maps(
+                skew.cir_unit, n_inst_bn, task_machine.shape[1]
+            )
+            unit_ir = skew.per_row_unit_ir(n_inst_bn)
+            task_types = etg.utg.component_types[comp]
+        else:
+            comp = etg.task_component()
+            task_types = etg.utg.component_types[comp][None, :]
+            unit_ir = skew.per_task_unit_ir(etg.n_instances)
+        mtypes = cluster.machine_types[task_machine]
+        e = cluster.profile.e[task_types, mtypes]
+        met = cluster.profile.met[task_types, mtypes]
+        return closed_form_rates(task_machine, e, met, unit_ir, cluster.capacity)
     if resolve_closed_form_backend(backend, task_machine.size) == "jax":
         from repro.core.sim_jax import max_stable_rate_batch_jax
 

@@ -25,15 +25,47 @@ from typing import Sequence
 import numpy as np
 
 __all__ = [
+    "FieldsGrouping",
     "UserGraph",
     "ExecutionGraph",
     "linear_topology",
     "diamond_topology",
     "star_topology",
     "rolling_count_topology",
+    "keyed_rolling_count_topology",
     "unique_visitor_topology",
     "wide_fanout_topology",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldsGrouping:
+    """Keyed routing spec for one edge (Storm's *fields grouping*).
+
+    Tuples on the edge carry a key drawn from a Zipf-distributed key space:
+    key k of ``n_keys`` has probability mass proportional to
+    ``(k + 1) ** -zipf_s`` (``zipf_s = 0`` is uniform). Every key is pinned
+    to one downstream instance by a deterministic hash→instance map, so a
+    hot key concentrates load on a single instance — the within-operator
+    imbalance the paper's eq. 6 even split cannot express.
+
+    The spec is *structural*: which instance each key lands on (the hash
+    values) is drawn at trace ``compile(seed)`` time like all other
+    randomness (see ``runtime_stream.traces.KeyRealization``).
+    """
+
+    edge: tuple[int, int]
+    n_keys: int = 64
+    zipf_s: float = 1.0
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "edge", (int(self.edge[0]), int(self.edge[1])))
+        if int(self.n_keys) < 1:
+            raise ValueError("fields grouping needs at least one key")
+        if not (float(self.zipf_s) >= 0.0):
+            raise ValueError("zipf_s must be >= 0 (0 = uniform keys)")
+        object.__setattr__(self, "n_keys", int(self.n_keys))
+        object.__setattr__(self, "zipf_s", float(self.zipf_s))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,12 +82,15 @@ class UserGraph:
         every non-spout component reachable from a spout.
       alpha: length-n float array, tuple division ratio per component
         (``OR = alpha * IR``). Spouts' alpha scales the injected rate.
+      groupings: fields-grouped edges (``FieldsGrouping`` per keyed edge);
+        every edge not listed uses shuffle grouping (the paper's default).
     """
 
     name: str
     component_types: np.ndarray
     edges: tuple[tuple[int, int], ...]
     alpha: np.ndarray
+    groupings: tuple[FieldsGrouping, ...] = ()
 
     def __post_init__(self) -> None:
         object.__setattr__(
@@ -63,6 +98,7 @@ class UserGraph:
         )
         object.__setattr__(self, "alpha", np.asarray(self.alpha, dtype=np.float64))
         object.__setattr__(self, "edges", tuple((int(a), int(b)) for a, b in self.edges))
+        object.__setattr__(self, "groupings", tuple(self.groupings))
         n = self.n_components
         if self.alpha.shape != (n,):
             raise ValueError(f"alpha must have shape ({n},), got {self.alpha.shape}")
@@ -71,6 +107,15 @@ class UserGraph:
                 raise ValueError(f"edge ({a},{b}) out of range for {n} components")
             if a == b:
                 raise ValueError("self-loops are not allowed (DAG)")
+        seen: set[tuple[int, int]] = set()
+        for g in self.groupings:
+            if not isinstance(g, FieldsGrouping):
+                raise ValueError("groupings must be FieldsGrouping instances")
+            if g.edge not in self.edges:
+                raise ValueError(f"fields grouping on unknown edge {g.edge}")
+            if g.edge in seen:
+                raise ValueError(f"duplicate grouping for edge {g.edge}")
+            seen.add(g.edge)
         # Validate acyclicity + topological order computability.
         self.topo_order()
 
@@ -91,6 +136,24 @@ class UserGraph:
 
     def children(self, i: int) -> list[int]:
         return [b for a, b in self.edges if a == i]
+
+    def grouping(self, edge: tuple[int, int]) -> FieldsGrouping | None:
+        """The fields grouping on ``edge``, or None (shuffle grouping)."""
+        for g in self.groupings:
+            if g.edge == edge:
+                return g
+        return None
+
+    @property
+    def keyed_components(self) -> list[int]:
+        """Components with at least one fields-grouped in-edge, in index
+        order — their per-instance input split departs from eq. 6."""
+        return sorted({g.edge[1] for g in self.groupings})
+
+    def with_groupings(self, *groupings: FieldsGrouping) -> "UserGraph":
+        """Copy of this UTG with the given fields groupings (replaces any
+        existing ones)."""
+        return dataclasses.replace(self, groupings=tuple(groupings))
 
     def topo_order(self) -> list[int]:
         n = self.n_components
@@ -161,6 +224,14 @@ class ExecutionGraph:
             return np.zeros(0, dtype=np.int64)
         return np.concatenate(self.assignment)
 
+    def component_offsets(self) -> np.ndarray:
+        """(n+1,) start offset of each component's task block in the
+        flattened eq. 3 order — the single owner of the block-layout rule
+        (``offsets[c] + k`` is the flat index of instance (c, k))."""
+        return np.concatenate(
+            [np.zeros(1, dtype=np.int64), np.cumsum(self.n_instances)]
+        )
+
     def with_new_instance(self, component: int, machine: int) -> "ExecutionGraph":
         new = self.copy()
         new.n_instances[component] += 1
@@ -222,6 +293,19 @@ def rolling_count_topology() -> UserGraph:
         component_types=np.array([SPOUT, HIGH, LOW]),
         edges=((0, 1), (1, 2)),
         alpha=np.array([1.0, 4.0, 1.0]),
+    )
+
+
+def keyed_rolling_count_topology(n_keys: int = 32, zipf_s: float = 1.2) -> UserGraph:
+    """RollingCount with its word->counter edge fields-grouped.
+
+    The canonical keyed-stream shape: the split bolt fans sentences into
+    words (alpha > 1) and each word is pinned to one rolling counter by
+    fields grouping, so a Zipf-hot word concentrates load on one counter
+    instance — the load-imbalance scenario family of ROADMAP open item 3.
+    """
+    return rolling_count_topology().with_groupings(
+        FieldsGrouping(edge=(1, 2), n_keys=n_keys, zipf_s=zipf_s)
     )
 
 

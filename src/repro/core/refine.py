@@ -50,6 +50,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import cost_model
 from repro.core.cost_model import max_stable_rate
 from repro.core.graph import ExecutionGraph
 from repro.core.profiles import Cluster
@@ -89,6 +90,7 @@ def refine(
     backend: str = "auto",
     lockstep: bool = True,
     adaptive_growth: bool = False,
+    skew: "cost_model.SkewModel | None" = None,
 ) -> RefineResult:
     """Hill-climb refinement of ``etg``'s placement (and instance counts).
 
@@ -121,16 +123,23 @@ def refine(
         equivalence contract covers the default; lockstep and sequential
         explorers produce identical adaptive results (tested). State
         engine only.
+      skew: optional ``cost_model.SkewModel`` — every candidate (and the
+        incumbent) scores with the skew-aware per-instance utilization
+        bound instead of the eq. 6 even split, so growth offers on a
+        component whose instances are skew-saturated cannot report
+        even-split gains. State engine only; forces NumPy scoring.
     """
     if engine == "state":
         return _refine_state(
             etg, cluster, max_rounds, tol, allow_add, backend, lockstep,
-            adaptive_growth,
+            adaptive_growth, skew,
         )
     if engine != "reference":
         raise ValueError(f"unknown engine {engine!r}; use 'state' or 'reference'")
     if adaptive_growth:
         raise ValueError("adaptive_growth requires engine='state'")
+    if skew is not None:
+        raise ValueError("skew requires engine='state'")
     return _refine_reference(etg, cluster, max_rounds, tol, allow_add)
 
 
@@ -553,6 +562,7 @@ def _refine_state(
     backend: str,
     lockstep: bool = True,
     adaptive_growth: bool = False,
+    skew=None,
 ) -> RefineResult:
     """Incremental-engine hill climb: identical decisions, batched scoring.
 
@@ -569,8 +579,15 @@ def _refine_state(
     an O(m) ``ScheduleState`` delta; growth exploration carries candidate
     rows/counts per chain, never mutating the live state.
     """
-    state = ScheduleState.from_etg(etg, cluster)
-    best = _score(state.to_etg(), cluster)
+    state = ScheduleState.from_etg(etg, cluster, skew=skew)
+    if skew is None:
+        best = _score(state.to_etg(), cluster)
+    else:
+        # The incumbent must score under the same skew-aware bound as the
+        # candidates, or offers get compared against the even-split score.
+        best = float(
+            state.score_task_machine_batch(state.task_machine()[None, :])[1][0]
+        )
     moves: list[str] = []
     m = cluster.n_machines
     n = state.utg.n_components
@@ -761,5 +778,5 @@ def _refine_state(
         moves.append(desc)
 
     final = state.to_etg()
-    rate, thpt = max_stable_rate(final, cluster)
+    rate, thpt = max_stable_rate(final, cluster, skew=skew)
     return RefineResult(etg=final, rate=rate, throughput=thpt, moves=moves)

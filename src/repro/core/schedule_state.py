@@ -92,11 +92,18 @@ class ScheduleState:
         "e_cm",
         "met_cm",
         "cir_unit",
+        "skew",
         "_met_load",
         "_var_load",
     )
 
-    def __init__(self, utg: UserGraph, cluster: Cluster, etg: ExecutionGraph):
+    def __init__(
+        self,
+        utg: UserGraph,
+        cluster: Cluster,
+        etg: ExecutionGraph,
+        skew: "cost_model.SkewModel | None" = None,
+    ):
         self.utg = utg
         self.cluster = cluster
         self.n_instances = etg.n_instances.copy()
@@ -106,6 +113,9 @@ class ScheduleState:
         self.e_cm = cluster.profile.e[ttypes][:, cluster.machine_types]
         self.met_cm = cluster.profile.met[ttypes][:, cluster.machine_types]
         self.cir_unit = cost_model.component_rates(utg, 1.0)
+        if skew is not None and skew.utg is not utg:
+            raise ValueError("skew model was built for a different topology")
+        self.skew = skew
         self.comp_counts = np.zeros((n, m), dtype=np.int64)
         for c, machines in enumerate(self.assignment):
             for w in machines:
@@ -114,8 +124,13 @@ class ScheduleState:
         self._var_load: np.ndarray | None = None
 
     @classmethod
-    def from_etg(cls, etg: ExecutionGraph, cluster: Cluster) -> "ScheduleState":
-        return cls(etg.utg, cluster, etg)
+    def from_etg(
+        cls,
+        etg: ExecutionGraph,
+        cluster: Cluster,
+        skew: "cost_model.SkewModel | None" = None,
+    ) -> "ScheduleState":
+        return cls(etg.utg, cluster, etg, skew=skew)
 
     # ------------------------------------------------------------- loads
 
@@ -126,14 +141,34 @@ class ScheduleState:
             self._met_load = (self.met_cm * self.comp_counts).sum(axis=0)
         return self._met_load
 
+    def _skew_variable_load(self, cir: np.ndarray) -> np.ndarray:
+        """(m,) variable load for a per-component input-rate vector,
+        accumulated per instance: keyed components at their realized key
+        shares, shuffle components at the exact even split. The single
+        skew accumulation both ``var_load`` and ``utilization`` use."""
+        var = np.zeros(self.cluster.n_machines, dtype=np.float64)
+        for c in range(self.utg.n_components):
+            nk = int(self.n_instances[c])
+            frac = self.skew.instance_fractions(c, nk)
+            w = np.asarray(self.assignment[c], dtype=np.int64)
+            ir = np.full(nk, cir[c] / nk) if frac is None else cir[c] * frac
+            np.add.at(var, w, self.e_cm[c, w] * ir)
+        return var
+
     @property
     def var_load(self) -> np.ndarray:
         """(m,) d utilization / d rate per machine at the current structure."""
         if self._var_load is None:
-            per_unit = self.cir_unit / self.n_instances
-            self._var_load = (self.e_cm * self.comp_counts * per_unit[:, None]).sum(
-                axis=0
-            )
+            if self.skew is None:
+                per_unit = self.cir_unit / self.n_instances
+                self._var_load = (
+                    self.e_cm * self.comp_counts * per_unit[:, None]
+                ).sum(axis=0)
+            else:
+                # Keyed components: instances are no longer interchangeable
+                # (each handles its own key share), so accumulate per
+                # instance instead of per (component, machine) count.
+                self._var_load = self._skew_variable_load(self.cir_unit)
         return self._var_load
 
     def utilization(self, rate: float) -> np.ndarray:
@@ -143,9 +178,13 @@ class ScheduleState:
         at the actual rate, not ``cir_unit * rate``) so per-chunk TCUs match
         the reference floats exactly; the per-machine summation is collapsed
         from per-task to per-component, which can differ from the
-        reference's ``np.add.at`` accumulation in the last ulp.
+        reference's ``np.add.at`` accumulation in the last ulp. With a skew
+        model, keyed components accumulate per instance at their realized
+        key shares (the skew-aware utilization bound).
         """
         cir = cost_model.component_rates(self.utg, rate)
+        if self.skew is not None:
+            return self.met_load + self._skew_variable_load(cir)
         per_inst = cir / self.n_instances
         return self.met_load + (self.e_cm * self.comp_counts * per_inst[:, None]).sum(
             axis=0
@@ -277,6 +316,29 @@ class ScheduleState:
         task_machine = np.asarray(task_machine, dtype=np.int64)
         if task_machine.ndim != 2:
             raise ValueError("task_machine must be (B, sum(n_instances))")
+        if self.skew is not None:
+            # Skew-aware scoring: keyed components' unit IR comes from the
+            # realized per-instance fractions (NumPy floats only — the
+            # jitted kernel has no skew path, so ``backend`` is ignored).
+            if n_inst.ndim == 2:
+                if n_inst.shape != (task_machine.shape[0], n):
+                    raise ValueError("per-row n_instances must be (B, n)")
+                comp, _ = cost_model.per_row_task_maps(
+                    self.cir_unit, n_inst, task_machine.shape[1]
+                )
+                unit_ir = self.skew.per_row_unit_ir(n_inst)
+                gather_comp = comp
+            else:
+                comp = np.repeat(np.arange(n), n_inst)
+                if task_machine.shape[1] != comp.shape[0]:
+                    raise ValueError("task_machine must be (B, sum(n_instances))")
+                unit_ir = self.skew.per_task_unit_ir(n_inst)
+                gather_comp = comp[None, :]
+            e = self.e_cm[gather_comp, task_machine]
+            met = self.met_cm[gather_comp, task_machine]
+            return cost_model.closed_form_rates(
+                task_machine, e, met, unit_ir, self.cluster.capacity
+            )
         if n_inst.ndim == 2:
             if n_inst.shape != (task_machine.shape[0], n):
                 raise ValueError("per-row n_instances must be (B, n)")

@@ -32,9 +32,12 @@ from repro.runtime_stream.executor import (
 )
 from repro.runtime_stream.traces import (
     CompiledTrace,
+    KeyRealization,
+    KeyedEdgeTrace,
     TraceSpec,
     burst_trace,
     failure_trace,
+    key_skew_shift,
     machine_removal,
     machine_slowdown,
     ramp_trace,
@@ -43,23 +46,28 @@ from repro.runtime_stream.traces import (
     rate_ramp,
     rate_sine,
     sine_trace,
+    skew_shift_trace,
     slowdown_trace,
 )
 
 __all__ = [
     "TraceSpec",
     "CompiledTrace",
+    "KeyRealization",
+    "KeyedEdgeTrace",
     "rate_ramp",
     "rate_burst",
     "rate_sine",
     "rate_noise",
     "machine_slowdown",
     "machine_removal",
+    "key_skew_shift",
     "ramp_trace",
     "burst_trace",
     "sine_trace",
     "slowdown_trace",
     "failure_trace",
+    "skew_shift_trace",
     "RuntimeConfig",
     "RuntimeResult",
     "StreamExecutor",

@@ -70,6 +70,11 @@ class WindowObs:
     queue_frac: float           # deepest queue / max_queue
     queue_by_component: np.ndarray  # (n,) backlog per component
     throughput: float
+    # Fields-grouping view (None / 0 on all-shuffle topologies): the active
+    # key realizations as a cost_model.SkewModel, and a counter that bumps
+    # at every key_skew_shift boundary.
+    skew: "cost_model.SkewModel | None" = None
+    skew_epoch: int = 0
 
 
 def provision_schedule(
@@ -125,6 +130,17 @@ class OnlineController:
       adaptive_growth: forward refine's depth-adaptive growth menu (lets a
         single replan grow a component past 4 instances when the closed
         form keeps improving — useful under fast rate ramps).
+      measure_noise: when > 0, the controller observes machine utilization
+        through the §6.2 measurement model instead of exactly: zero-mean
+        Gaussian error with std ``measure_noise * cap_w * 4u(1-u)``
+        (peaked at 50% load, truncated below the paper's observed 8% of
+        capacity) is added to the drift detector's view. Only *detection*
+        sees the noise — replans still score on the exact closed form,
+        and the demand-capped cost/benefit guard is what keeps spurious
+        triggers from churning the placement (tested no-churn at steady
+        state).
+      noise_seed: seed stream for the measurement noise (drawn per window,
+        so runs stay deterministic).
     """
 
     def __init__(
@@ -138,6 +154,8 @@ class OnlineController:
         migration_cost: float = 25.0,
         horizon_windows: int = 60,
         adaptive_growth: bool = False,
+        measure_noise: float = 0.0,
+        noise_seed: int = 0,
     ):
         self.utg = utg
         self.cluster = cluster
@@ -148,22 +166,57 @@ class OnlineController:
         self.migration_cost = float(migration_cost)
         self.horizon_windows = int(horizon_windows)
         self.adaptive_growth = bool(adaptive_growth)
+        self.measure_noise = float(measure_noise)
+        self.noise_seed = int(noise_seed)
         self._cir_sum = float(cost_model.component_rates(utg, 1.0).sum())
         self._last_capacity: np.ndarray | None = None
+        self._last_skew_epoch: int | None = None
         self.log: list[tuple[int, str]] = []
 
     # ------------------------------------------------------------ drift
+
+    def _observed_util(self, obs: WindowObs) -> np.ndarray:
+        """The drift detector's view of machine utilization — exact, or
+        perturbed by the §6.2 measurement model when ``measure_noise`` > 0
+        (seeded per window: same run, same observations)."""
+        if self.measure_noise <= 0.0:
+            return obs.machine_util
+        cap = np.where(obs.capacity > 0.0, obs.capacity, 1.0)
+        u = np.clip(obs.machine_util / cap, 0.0, 1.0)
+        # §6.2 shape scaled per machine: error is a fraction of *that
+        # machine's* instantaneous capacity (the paper's 100-point budget
+        # and <8-point truncation as capacity fractions), so slowed-down
+        # machines aren't over-noised.
+        std = self.measure_noise * cap * 4.0 * u * (1.0 - u)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.noise_seed, obs.window])
+        )
+        bound = 0.079 * cap
+        noise = np.clip(rng.normal(0.0, 1.0, size=std.shape) * std, -bound, bound)
+        return np.clip(obs.machine_util + noise, 0.0, None)
 
     def _drifted(self, obs: WindowObs) -> str | None:
         if self._last_capacity is not None and not np.array_equal(
             obs.capacity, self._last_capacity
         ):
             return "capacity"
+        if self._last_skew_epoch is not None and (
+            obs.skew_epoch != self._last_skew_epoch
+        ):
+            # A key_skew_shift moved the hot keys: the placement was tuned
+            # for the old realization even if nothing saturates yet.
+            return "skew_shift"
         if obs.throttle < 1.0 or obs.queue_frac > self.queue_high:
             return "saturated"
+        machine_util = self._observed_util(obs)
         alive = obs.capacity > 0.0
-        if np.any(obs.machine_util[alive] >= self.util_high * obs.capacity[alive]):
+        if np.any(machine_util[alive] >= self.util_high * obs.capacity[alive]):
             return "hot"
+        if obs.skew is not None and obs.queue_frac > 0.5 * self.queue_high:
+            # Keyed blind spot: a single hot instance's queue is building
+            # while every machine-average utilization still looks healthy
+            # — the even-split signals above would wait for saturation.
+            return "hot_instance"
         return None
 
     # ------------------------------------------------------- evacuation
@@ -213,16 +266,22 @@ class OnlineController:
 
         reason = self._drifted(obs)
         self._last_capacity = obs.capacity.copy()
+        self._last_skew_epoch = obs.skew_epoch
         if reason is None:
             return None
         cluster_t = self.cluster.with_capacity(obs.capacity)
-        _, cur_thpt = cost_model.max_stable_rate(obs.etg, cluster_t)
+        # Skew-aware scoring throughout: on keyed topologies both the
+        # incumbent's worth and every replan candidate price per-instance
+        # key shares, so a hot instance the even split cannot see is
+        # exactly what the replan optimizes away.
+        _, cur_thpt = cost_model.max_stable_rate(obs.etg, cluster_t, skew=obs.skew)
         base = self._evacuate(obs.etg, cluster_t, obs.offered_rate)
         plan = refine(
             base,
             cluster_t,
             max_rounds=self.max_moves,
             adaptive_growth=self.adaptive_growth,
+            skew=obs.skew,
         )
         moved = placement_migrations(obs.etg, plan.etg)
         if moved == 0:

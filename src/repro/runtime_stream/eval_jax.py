@@ -6,7 +6,10 @@ state is ``(backlog (B,P,T), prev_out (B,P,n), throttle (B,P))``, the scan
 consumes the stacked per-window trace arrays, and the topology recurrence
 unrolls over the (few) components with the structure baked in statically.
 Per-machine scatter/gather run as one-hot einsum contractions against a
-precomputed (P, T, m) placement tensor.
+precomputed (P, T, m) placement tensor. Fields-grouped edges route through
+per-key share grids — dense (W, B, N) expansions of each realization
+segment's hash→instance map — threaded through the scan as per-window
+inputs, so keyed runs stay bit-compatible with the Python loop.
 
 Everything runs in float64 (``jax.experimental.enable_x64``): the window
 step is the exact formula sequence of ``StreamExecutor.run`` (no
@@ -69,12 +72,26 @@ def _validate(
     if not traces:
         raise ValueError("need at least one trace")
     W = traces[0].n_windows
+    want_edges = {g.edge for g in etg.utg.groupings}
     for tr in traces:
         if tr.n_windows != W or tr.window_s != traces[0].window_s:
             raise ValueError("traces must share n_windows and window_s")
         if tr.capacity.shape[1] != cluster.n_machines:
             raise ValueError("trace capacity grid does not match the cluster")
+        if {kt.edge for kt in tr.keyed} != want_edges:
+            raise ValueError(
+                "trace keyed edges do not match the topology's fields "
+                "groupings — compile every trace with utg=etg.utg"
+            )
     return policies
+
+
+def _edge_share_grid(tr, edge: tuple[int, int], n_inst: int) -> np.ndarray:
+    """(W, n_inst) per-window instance shares of one fields edge (dense
+    realization-segment expansion of the hash→instance map)."""
+    kt = next(k for k in tr.keyed if k.edge == edge)
+    per_seg = np.stack([r.shares(n_inst) for _, r in kt.segments])
+    return per_seg[kt.segment_indices(tr.n_windows)]
 
 
 def evaluate_policies_batch(
@@ -162,8 +179,27 @@ def _evaluate_jax(etg, cluster, traces, policies, config) -> PolicyEvalResult:
     dt = traces[0].window_s
     topo = tuple(utg.topo_order())
     sources = frozenset(utg.sources)
-    parents = tuple(tuple(utg.parents(i)) for i in range(n))
     alpha = tuple(float(a) for a in utg.alpha)
+    # Fields edges route per key share; only shuffle in-edges stay in the
+    # even-split component recurrence. Static per-edge structure: parent,
+    # the destination's task block [lo, hi), and a (W, B, N) share grid
+    # threaded through the scan as per-window inputs.
+    keyed_edges = tuple(g.edge for g in utg.groupings)
+    parents = tuple(
+        tuple(p for p in utg.parents(i) if (p, i) not in keyed_edges)
+        for i in range(n)
+    )
+    offsets = etg.component_offsets()
+    keyed_static = tuple(
+        (p, int(offsets[i]), int(offsets[i + 1])) for p, i in keyed_edges
+    )
+    key_shares = tuple(
+        np.stack(
+            [_edge_share_grid(tr, (p, i), int(etg.n_instances[i])) for tr in traces],
+            axis=1,
+        )  # (W, B, N)
+        for p, i in keyed_edges
+    )
 
     ttypes = utg.component_types[comp]
     mtypes = cluster.machine_types[policies]             # (P, T)
@@ -180,9 +216,12 @@ def _evaluate_jax(etg, cluster, traces, policies, config) -> PolicyEvalResult:
 
     def step(carry, xs):
         backlog, prev_out, throttle = carry       # (B,P,T) (B,P,n) (B,P)
-        r_t, cap = xs                             # (B,) (B,m)
+        r_t, cap, shares_t = xs                   # (B,) (B,m) tuple of (B,N)
         r_adm = r_t[:, None] * throttle           # (B,P)
-        # 1. Arrivals (one hop per window).
+        # 1. Arrivals (one hop per window): even split for spout injection
+        # and shuffle edges, then each fields edge adds its keyed
+        # contribution at the window's hash shares — same composition
+        # order as the Python executor's arr_inst.
         arr = [None] * n
         for i in topo:
             if i in sources:
@@ -193,7 +232,13 @@ def _evaluate_jax(etg, cluster, traces, policies, config) -> PolicyEvalResult:
                     a = a + alpha[p_] * prev_out[:, :, p_]
                 arr[i] = a
         arr_n = jnp.stack(arr, axis=2)            # (B,P,n)
-        backlog = backlog + (arr_n[:, :, comp] / n_task[None, None, :]) * dt
+        arr_task = arr_n[:, :, comp] / n_task[None, None, :]
+        for (p_, lo, hi), s_e in zip(keyed_static, shares_t):
+            contrib = alpha[p_] * prev_out[:, :, p_]          # (B,P)
+            arr_task = arr_task.at[:, :, lo:hi].add(
+                contrib[:, :, None] * s_e[:, None, :]
+            )
+        backlog = backlog + arr_task * dt
         over = jnp.clip(backlog - cfg.max_queue, 0.0, None)
         backlog = backlog - over
         dropped = over.sum(axis=2) / dt
@@ -236,17 +281,17 @@ def _evaluate_jax(etg, cluster, traces, policies, config) -> PolicyEvalResult:
         return (backlog, prev_out, throttle_next), metrics
 
     @jax.jit
-    def sweep(rates, caps):
+    def sweep(rates, caps, key_shares):
         carry0 = (
             jnp.zeros((B, P, T)),
             jnp.zeros((B, P, n)),
             jnp.ones((B, P)),
         )
-        _, ms = jax.lax.scan(step, carry0, (rates, caps))
+        _, ms = jax.lax.scan(step, carry0, (rates, caps, key_shares))
         return ms
 
     with enable_x64():
-        thpt, adm, drp, qtot, thr, util = sweep(rates, caps)
+        thpt, adm, drp, qtot, thr, util = sweep(rates, caps, key_shares)
 
     def wbp(x):  # (W, B, P) -> (B, P, W)
         return np.asarray(x).transpose(1, 2, 0)

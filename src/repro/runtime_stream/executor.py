@@ -7,10 +7,12 @@ discrete-time fluid model of Storm's executor pipeline:
 1. **Arrive.** Spouts emit the window's offered rate scaled by the current
    back-pressure throttle; each bolt receives its parents' *previous-window*
    processed output times the edge's tuple-division ratio alpha (eq. 6) —
-   tuples travel one hop per window. A component's stream splits evenly
-   over its instances (shuffle grouping), landing in per-instance queues.
-   Queues are bounded at ``max_queue`` tuples; overflow is dropped (and
-   counted).
+   tuples travel one hop per window. A shuffle-grouped stream splits evenly
+   over the component's instances; a fields-grouped edge routes each key's
+   share to the instance its drawn hash pins it to
+   (``KeyRealization.shares``, the deterministic hash→instance map), so
+   hot keys land in single per-instance queues. Queues are bounded at
+   ``max_queue`` tuples; overflow is dropped (and counted).
 2. **Serve.** Every instance tries to drain its whole queue this window;
    its service demand prices at the profile tables (eq. 5:
    ``e·rate + MET``). A machine whose demand exceeds its windowed capacity
@@ -145,7 +147,7 @@ def placement_migrations(old: ExecutionGraph, new: ExecutionGraph) -> int:
 class _Placement:
     """Flat per-task views of one ExecutionGraph on one cluster."""
 
-    __slots__ = ("etg", "comp", "machine", "e", "met", "n_inst")
+    __slots__ = ("etg", "comp", "machine", "e", "met", "n_inst", "offsets")
 
     def __init__(self, etg: ExecutionGraph, cluster: Cluster):
         self.etg = etg
@@ -156,6 +158,7 @@ class _Placement:
         self.e = cluster.profile.e[ttypes, mtypes]
         self.met = cluster.profile.met[ttypes, mtypes]
         self.n_inst = etg.n_instances
+        self.offsets = etg.component_offsets()
 
 
 class StreamExecutor:
@@ -181,11 +184,21 @@ class StreamExecutor:
         self.cluster = cluster
         self.config = config or RuntimeConfig()
         self.trace = (
-            trace if isinstance(trace, CompiledTrace) else trace.compile(cluster, seed)
+            trace
+            if isinstance(trace, CompiledTrace)
+            else trace.compile(cluster, seed, utg=etg.utg)
         )
         if self.trace.capacity.shape[1] != cluster.n_machines:
             raise ValueError("trace capacity grid does not match the cluster")
+        keyed_edges = {kt.edge for kt in self.trace.keyed}
+        want_edges = {g.edge for g in etg.utg.groupings}
+        if keyed_edges != want_edges:
+            raise ValueError(
+                "compiled trace's keyed edges do not match the topology's "
+                "fields groupings — compile the trace with utg=etg.utg"
+            )
         self._initial_etg = etg
+        self._skew_cache: dict[int, object] = {}
 
     # ------------------------------------------------------------- run
 
@@ -213,6 +226,27 @@ class StreamExecutor:
         parents = [utg.parents(i) for i in range(n)]
         alpha = utg.alpha
 
+        # Keyed routing state: per fields edge, the parent, destination,
+        # per-window active-segment index and the segment realizations;
+        # shuffle_parents keeps only the evenly-split in-edges (spout
+        # injection is always even). With no fields groupings this leaves
+        # the arrival path bit-identical to the even-split event loop.
+        keyed: list[tuple[int, int, np.ndarray, list]] = []
+        for kt in tr.keyed:
+            keyed.append(
+                (
+                    kt.edge[0],
+                    kt.edge[1],
+                    kt.segment_indices(W),
+                    [r for _, r in kt.segments],
+                )
+            )
+        keyed_edge_set = {(p, i) for p, i, _, _ in keyed}
+        shuffle_parents = [
+            [p for p in parents[i] if (p, i) not in keyed_edge_set]
+            for i in range(n)
+        ]
+
         place = _Placement(self._initial_etg, self.cluster)
         backlog = np.zeros(place.comp.shape[0], dtype=np.float64)
         pause = np.zeros(place.comp.shape[0], dtype=np.int64)
@@ -237,14 +271,21 @@ class StreamExecutor:
 
             # 1. Arrivals: one hop per window (spouts this window, bolts
             # from their parents' previous-window processed output).
+            # Shuffle streams split evenly; each fields edge then adds its
+            # keyed contribution at the active realization's hash shares.
             arr = np.zeros(n, dtype=np.float64)
             for i in topo:
                 if i in sources:
                     arr[i] = r_adm
                 else:
-                    for p in parents[i]:
+                    for p in shuffle_parents[i]:
                         arr[i] += alpha[p] * prev_out[p]
-            backlog = backlog + (arr[place.comp] / place.n_inst[place.comp]) * dt
+            arr_inst = arr[place.comp] / place.n_inst[place.comp]
+            for p, i, seg_idx, segs in keyed:
+                lo, hi = int(place.offsets[i]), int(place.offsets[i + 1])
+                real = segs[seg_idx[t]]
+                arr_inst[lo:hi] += (alpha[p] * prev_out[p]) * real.shares(hi - lo)
+            backlog = backlog + arr_inst * dt
             over = np.clip(backlog - cfg.max_queue, 0.0, None)
             backlog = backlog - over
             dropped[t] = float(over.sum()) / dt
@@ -298,6 +339,8 @@ class StreamExecutor:
                     queue_frac=float(q_frac),
                     queue_by_component=self._component_backlog(place, backlog),
                     throughput=float(throughput[t]),
+                    skew=self.skew_model_at(t),
+                    skew_epoch=tr.skew_epoch(t),
                 )
                 new_etg = controller.update(obs)
                 if new_etg is not None:
@@ -324,6 +367,27 @@ class StreamExecutor:
             final_etg=place.etg,
         )
 
+    # ------------------------------------------------------------- skew
+
+    def skew_model_at(self, window: int):
+        """Skew-aware cost view of the active key realizations (cached per
+        realization epoch; None for all-shuffle topologies). Controllers
+        thread this into ``refine`` so replans score imbalanced placements
+        with the realized per-instance load fractions."""
+        if not self.trace.keyed:
+            return None
+        epoch = self.trace.skew_epoch(window)
+        model = self._skew_cache.get(epoch)
+        if model is None:
+            from repro.core.cost_model import SkewModel
+
+            reals = self.trace.realizations_at(window)
+            model = SkewModel(
+                self._initial_etg.utg, {e: r.shares for e, r in reals.items()}
+            )
+            self._skew_cache[epoch] = model
+        return model
+
     # ------------------------------------------------------- migration
 
     @staticmethod
@@ -338,7 +402,9 @@ class StreamExecutor:
         """Swap the live placement.
 
         Each component's total backlog redistributes evenly over its new
-        instances (shuffle regrouping on restart). Instances beyond the
+        instances (shuffle regrouping on restart; keyed components rehash
+        in-flight tuples on restart, modeled as the same even re-split —
+        fresh arrivals re-route by key immediately). Instances beyond the
         per-(component, machine) count carried over from the old placement
         are new or moved and pause for ``migration_pause`` windows.
         """

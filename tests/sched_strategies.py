@@ -10,7 +10,14 @@ top level.
 import numpy as np
 from hypothesis import strategies as st
 
-from repro.core import Cluster, Profile, UserGraph, paper_cluster, paper_profile
+from repro.core import (
+    Cluster,
+    FieldsGrouping,
+    Profile,
+    UserGraph,
+    paper_cluster,
+    paper_profile,
+)
 
 PROFILE = paper_profile()
 
@@ -66,6 +73,49 @@ def random_wide_dag(draw, min_components: int = 8, max_components: int = 12):
         edges=tuple(sorted(edges)),
         alpha=np.array(alpha),
     )
+
+
+@st.composite
+def random_keyed_dag(
+    draw,
+    max_components: int = 6,
+    max_keys: int = 48,
+    max_zipf_s: float = 2.5,
+    min_fields_edges: int = 0,
+):
+    """Random DAG with a random mix of shuffle and fields-grouped edges.
+
+    Each edge independently flips to fields grouping with a drawn key
+    cardinality (down to a single key — everything pinned to one instance)
+    and skew exponent (0 = uniform keys .. strongly Zipf-hot), so the
+    keyed property suite sweeps the whole scenario family: pure shuffle,
+    mixed, and fully keyed graphs."""
+    utg = draw(random_dag(max_components))
+    groupings = []
+    for edge in utg.edges:
+        if draw(st.booleans()):
+            groupings.append(
+                FieldsGrouping(
+                    edge=edge,
+                    n_keys=draw(st.integers(1, max_keys)),
+                    zipf_s=draw(st.floats(0.0, max_zipf_s)),
+                )
+            )
+    if len(groupings) < min_fields_edges:
+        need = min(min_fields_edges, len(utg.edges))
+        grouped = {g.edge for g in groupings}
+        for edge in utg.edges:
+            if len(groupings) >= need:
+                break
+            if edge not in grouped:
+                groupings.append(
+                    FieldsGrouping(
+                        edge=edge,
+                        n_keys=draw(st.integers(1, max_keys)),
+                        zipf_s=draw(st.floats(0.0, max_zipf_s)),
+                    )
+                )
+    return utg.with_groupings(*groupings)
 
 
 @st.composite

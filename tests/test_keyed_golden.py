@@ -1,0 +1,170 @@
+"""Deterministic keyed-grouping goldens (no hypothesis needed).
+
+The skew-aware closed form is pinned against an independent brute-force
+per-instance simulation, and refine's growth offers are pinned to the
+skew-aware score (the ISSUE 5 fix/guard satellite: a skew-saturated
+component must never report even-split gains). The randomized sweep of
+the same properties lives in tests/test_keyed_properties.py.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FieldsGrouping,
+    SkewModel,
+    keyed_rolling_count_topology,
+    max_stable_rate,
+    paper_cluster,
+    rolling_count_topology,
+    schedule,
+)
+from repro.core.refine import refine
+from repro.runtime_stream import TraceSpec, key_skew_shift
+
+
+def _compile_keyed(utg, cluster, seed, n_windows=4):
+    return TraceSpec(name="probe", n_windows=n_windows, base_rate=1.0).compile(
+        cluster, seed=seed, utg=utg
+    )
+
+
+def _skew_model(utg, cluster, seed):
+    reals = _compile_keyed(utg, cluster, seed).realizations_at(0)
+    return SkewModel(utg, {e: r.shares for e, r in reals.items()})
+
+
+def brute_force_rstar(etg, cluster, realizations, hi):
+    """Independent per-instance feasibility bisection: explicit eq. 6
+    propagation, per-edge routing (even split or key shares) and a Python
+    loop per instance — no closed form, no SkewModel."""
+    utg = etg.utg
+    topo = utg.topo_order()
+    sources = set(utg.sources)
+    keyed = {g.edge for g in utg.groupings}
+
+    def feasible(rate):
+        cir = np.zeros(utg.n_components)
+        for i in topo:
+            if i in sources:
+                cir[i] = rate
+            else:
+                cir[i] = sum(utg.alpha[p] * cir[p] for p in utg.parents(i))
+        util = np.zeros(cluster.n_machines)
+        for c in range(utg.n_components):
+            N = int(etg.n_instances[c])
+            inst = np.zeros(N)
+            if c in sources:
+                inst += rate / N
+            for p in utg.parents(c):
+                contrib = utg.alpha[p] * cir[p]
+                if (p, c) in keyed:
+                    inst += contrib * realizations[(p, c)].shares(N)
+                else:
+                    inst += contrib / N
+            for k in range(N):
+                w = int(etg.assignment[c][k])
+                tt = int(utg.component_types[c])
+                mt = int(cluster.machine_types[w])
+                util[w] += (
+                    cluster.profile.e[tt, mt] * inst[k] + cluster.profile.met[tt, mt]
+                )
+        return np.all(util <= cluster.capacity + 1e-9)
+
+    lo, hi = 0.0, float(hi)
+    for _ in range(80):
+        mid = 0.5 * (lo + hi)
+        if feasible(mid):
+            lo = mid
+        else:
+            hi = mid
+    return lo
+
+
+def test_single_key_pins_everything_to_one_instance():
+    """K=1 is the degenerate hot key: the whole edge stream lands on one
+    instance regardless of the parallelism degree."""
+    cluster = paper_cluster((1, 1, 1))
+    utg = keyed_rolling_count_topology(n_keys=1, zipf_s=1.0)
+    skew = _skew_model(utg, cluster, seed=5)
+    for n in (1, 2, 5):
+        frac = skew.instance_fractions(2, n)
+        assert frac.max() == pytest.approx(1.0)
+        assert np.count_nonzero(frac > 1e-12) == 1
+
+
+def test_key_skew_shift_requires_keyed_topology():
+    cluster = paper_cluster((1, 1, 1))
+    spec = TraceSpec(
+        name="bad", n_windows=10, base_rate=1.0, events=(key_skew_shift(start=5),)
+    )
+    with pytest.raises(ValueError, match="keyed topology"):
+        spec.compile(cluster, seed=0)
+    utg = keyed_rolling_count_topology()
+    tr = spec.compile(cluster, seed=0, utg=utg)
+    assert tr.skew_epoch(4) == 0 and tr.skew_epoch(5) == 1
+    assert any("key_skew_shift" in e for _, e in tr.events)
+    a, b = tr.realizations_at(4)[(1, 2)], tr.realizations_at(5)[(1, 2)]
+    assert not np.array_equal(a.hashes, b.hashes)
+
+
+def test_skew_bound_matches_bruteforce_simulation():
+    """The satellite regression pin: the skew-aware closed form must agree
+    with a brute-force per-instance simulation on a small golden — growth
+    offers scored through it can never report even-split gains."""
+    cluster = paper_cluster((1, 1, 1))
+    utg = keyed_rolling_count_topology(n_keys=8, zipf_s=2.0)
+    etg = schedule(utg, cluster, r0=1.0, rate_epsilon=0.05).etg
+    reals = _compile_keyed(utg, cluster, seed=3).realizations_at(0)
+    skew = SkewModel(utg, {e: r.shares for e, r in reals.items()})
+    r_even, _ = max_stable_rate(etg, cluster)
+    r_skew, _ = max_stable_rate(etg, cluster, skew=skew)
+    r_bf = brute_force_rstar(etg, cluster, reals, hi=2.0 * r_even)
+    assert r_skew == pytest.approx(r_bf, rel=1e-6)
+    assert r_skew < r_even  # the hot key makes the even split an over-report
+
+
+def test_refine_growth_offers_use_skew_score():
+    """Skew-saturated component: refine's growth offers must price the
+    realized shares. The refined schedule's reported throughput must match
+    the skew-aware closed form (verified against brute force), and refine
+    must actually recover throughput the even split can't see."""
+    cluster = paper_cluster((1, 1, 1))
+    utg = keyed_rolling_count_topology(n_keys=8, zipf_s=2.0)
+    etg = schedule(utg, cluster, r0=1.0, rate_epsilon=0.05).etg
+    reals = _compile_keyed(utg, cluster, seed=3).realizations_at(0)
+    skew = SkewModel(utg, {e: r.shares for e, r in reals.items()})
+    res = refine(etg, cluster, skew=skew)
+    # Reported score == skew-aware closed form of the final placement.
+    r_chk, t_chk = max_stable_rate(res.etg, cluster, skew=skew)
+    assert res.rate == r_chk and res.throughput == t_chk
+    # ... == brute-force per-instance simulation of the same placement.
+    r_bf = brute_force_rstar(res.etg, cluster, reals, hi=4.0 * r_chk + 1.0)
+    assert r_chk == pytest.approx(r_bf, rel=1e-6)
+    # The hill climb found real skew-aware gains the even-split-optimal
+    # start was blind to (this etg has no even-split improving moves).
+    r0_skew, _ = max_stable_rate(etg, cluster, skew=skew)
+    assert res.rate > r0_skew
+    assert refine(etg, cluster).moves == []
+    with pytest.raises(ValueError, match="skew"):
+        refine(etg, cluster, engine="reference", skew=skew)
+
+
+def test_grouping_validation():
+    with pytest.raises(ValueError, match="unknown edge"):
+        rolling_count_topology().with_groupings(
+            FieldsGrouping(edge=(0, 2), n_keys=4)
+        )
+    with pytest.raises(ValueError, match="duplicate"):
+        rolling_count_topology().with_groupings(
+            FieldsGrouping(edge=(1, 2)), FieldsGrouping(edge=(1, 2))
+        )
+    with pytest.raises(ValueError, match="at least one key"):
+        FieldsGrouping(edge=(1, 2), n_keys=0)
+    with pytest.raises(ValueError, match="zipf_s"):
+        FieldsGrouping(edge=(1, 2), zipf_s=-0.5)
+    utg = keyed_rolling_count_topology()
+    assert utg.keyed_components == [2]
+    assert utg.grouping((1, 2)) is not None and utg.grouping((0, 1)) is None
+    with pytest.raises(ValueError, match="edge_shares"):
+        SkewModel(utg, {})

@@ -1,0 +1,171 @@
+"""Hypothesis property suite for fields grouping with skewed keys (ISSUE 5).
+
+Randomized sweep over keyed graphs (mixed shuffle/fields edges, key
+cardinality down to 1, skew exponent 0..2.5):
+
+* shuffle grouping (no fields edges) flows through the keyed-aware code
+  paths bit-identically to the even split;
+* keyed randomness draws from an independent stream (rate/capacity arrays
+  unchanged by compiling against a topology);
+* realizations are seed-deterministic and their hash→instance shares are
+  a partition of the stream;
+* the skew-aware closed form never beats the even split, approximates it
+  for (near-)uniform keys, and agrees with the brute-force per-instance
+  feasibility search of tests/test_keyed_golden.py.
+"""
+
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    SkewModel,
+    keyed_rolling_count_topology,
+    max_stable_rate,
+    paper_cluster,
+    rolling_count_topology,
+    schedule,
+)
+from repro.core.schedule_state import ScheduleState
+from repro.runtime_stream import TraceSpec
+
+from sched_strategies import random_dag, random_keyed_dag
+from test_keyed_golden import _compile_keyed, _skew_model, brute_force_rstar
+
+SETTINGS = settings(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+# ------------------------------------------------------- shuffle identity
+
+
+@SETTINGS
+@given(utg=random_dag(), seed=st.integers(0, 2**31 - 1))
+def test_shuffle_scores_bit_identical_through_skew_paths(utg, seed):
+    """An all-shuffle topology scored through the skew machinery (empty
+    model, keyed-aware state engine) must reproduce the even-split floats
+    bit-for-bit — the shuffle-grouping regression gate."""
+    cluster = paper_cluster((1, 1, 1))
+    etg = schedule(utg, cluster, r0=1.0, rate_epsilon=0.5).etg
+    skew = SkewModel(utg, {})
+    r_even, t_even = max_stable_rate(etg, cluster)
+    r_skew, t_skew = max_stable_rate(etg, cluster, skew=skew)
+    assert r_skew == r_even and t_skew == t_even
+    state_even = ScheduleState.from_etg(etg, cluster)
+    state_skew = ScheduleState.from_etg(etg, cluster, skew=skew)
+    tm = state_even.task_machine()[None, :]
+    assert (
+        state_skew.score_task_machine_batch(tm)[1].tolist()
+        == state_even.score_task_machine_batch(tm)[1].tolist()
+    )
+    np.testing.assert_array_equal(state_skew.var_load, state_even.var_load)
+
+
+@SETTINGS
+@given(utg=random_keyed_dag(), seed=st.integers(0, 2**31 - 1))
+def test_compile_rates_unchanged_by_keyed_stream(utg, seed):
+    """Keyed randomness draws from an independent child stream: compiling
+    against the topology leaves rate/capacity arrays bit-identical."""
+    cluster = paper_cluster((1, 1, 1))
+    from repro.runtime_stream import rate_burst, rate_noise
+
+    spec = TraceSpec(
+        name="mix",
+        n_windows=30,
+        base_rate=2.0,
+        events=(rate_burst(2.0, every=10, jitter=2), rate_noise(0.05)),
+    )
+    a = spec.compile(cluster, seed=seed)
+    b = spec.compile(cluster, seed=seed, utg=utg)
+    assert np.array_equal(a.rates, b.rates)
+    assert np.array_equal(a.capacity, b.capacity)
+    assert len(b.keyed) == len(utg.groupings)
+
+
+# ------------------------------------------------------------ realizations
+
+
+@SETTINGS
+@given(
+    utg=random_keyed_dag(min_fields_edges=1),
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 7),
+)
+def test_key_shares_partition_the_stream(utg, seed, n):
+    """Every realization's shares are a non-negative partition of the edge
+    stream at any instance count, and re-compiling with the same seed
+    reproduces them bit-identically."""
+    cluster = paper_cluster((1, 1, 1))
+    tr = _compile_keyed(utg, cluster, seed)
+    tr2 = _compile_keyed(utg, cluster, seed)
+    assert tr.keyed and len(tr.keyed) == len(utg.groupings)
+    for kt, kt2 in zip(tr.keyed, tr2.keyed):
+        real, real2 = kt.realization_at(0), kt2.realization_at(0)
+        assert np.array_equal(real.weights, real2.weights)
+        assert np.array_equal(real.hashes, real2.hashes)
+        s = real.shares(n)
+        assert s.shape == (n,)
+        assert np.all(s >= 0.0)
+        assert abs(s.sum() - 1.0) < 1e-12
+    skew = _skew_model(utg, cluster, seed)
+    for c in skew.keyed_components:
+        frac = skew.instance_fractions(c, n)
+        assert np.all(frac >= 0.0)
+        assert abs(frac.sum() - 1.0) < 1e-9
+
+
+@SETTINGS
+@given(utg=random_keyed_dag(min_fields_edges=1), seed=st.integers(0, 2**31 - 1))
+def test_skew_irrelevant_on_single_machine(utg, seed):
+    """On a 1-machine cluster the split within a component cannot matter:
+    the machine sees the whole CIR either way, so the skew-aware and
+    even-split bounds agree (to summation rounding). Note the *ordering*
+    between them is NOT an invariant on real clusters — a lucky
+    realization can put less load on the binding machine than the even
+    split does — so agreement here is the sound version of 'skew only
+    changes where load lands, never how much'."""
+    cluster = paper_cluster((1, 0, 0))
+    etg = schedule(utg, cluster, r0=1.0, rate_epsilon=0.5).etg
+    skew = _skew_model(utg, cluster, seed)
+    r_even, t_even = max_stable_rate(etg, cluster)
+    r_skew, t_skew = max_stable_rate(etg, cluster, skew=skew)
+    assert r_skew == pytest.approx(r_even, rel=1e-9, abs=1e-12)
+    assert t_skew == pytest.approx(t_even, rel=1e-9, abs=1e-12)
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**31 - 1))
+def test_uniform_keys_approximate_shuffle(seed):
+    """Fields grouping with uniform keys and high cardinality ≈ shuffle:
+    hash collisions leave only O(sqrt(N/K)) imbalance — in either
+    direction (a lucky draw can under-load the binding machine)."""
+    cluster = paper_cluster((1, 1, 1))
+    utg = keyed_rolling_count_topology(n_keys=4096, zipf_s=0.0)
+    etg = schedule(rolling_count_topology(), cluster, r0=1.0, rate_epsilon=0.5).etg
+    etg_keyed = schedule(utg, cluster, r0=1.0, rate_epsilon=0.5).etg
+    assert etg_keyed.task_machine().tolist() == etg.task_machine().tolist()
+    skew = _skew_model(utg, cluster, seed)
+    r_even, _ = max_stable_rate(etg, cluster)
+    r_skew, _ = max_stable_rate(etg_keyed, cluster, skew=skew)
+    assert 0.85 * r_even <= r_skew <= 1.15 * r_even
+
+
+@SETTINGS
+@given(utg=random_keyed_dag(min_fields_edges=1), seed=st.integers(0, 2**31 - 1))
+def test_skew_bound_matches_bruteforce_random(utg, seed):
+    """The closed-form skew bound equals an independent brute-force
+    per-instance feasibility bisection on random keyed graphs."""
+    cluster = paper_cluster((1, 1, 1))
+    etg = schedule(utg, cluster, r0=1.0, rate_epsilon=0.5).etg
+    reals = _compile_keyed(utg, cluster, seed).realizations_at(0)
+    skew = SkewModel(utg, {e: r.shares for e, r in reals.items()})
+    r_even, _ = max_stable_rate(etg, cluster)
+    r_skew, _ = max_stable_rate(etg, cluster, skew=skew)
+    r_bf = brute_force_rstar(etg, cluster, reals, hi=2.0 * max(r_even, 1.0))
+    assert r_skew == pytest.approx(r_bf, rel=1e-6, abs=1e-9)

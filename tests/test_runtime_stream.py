@@ -12,6 +12,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    keyed_rolling_count_topology,
     linear_topology,
     max_stable_rate,
     paper_cluster,
@@ -39,6 +40,7 @@ from repro.runtime_stream import (
     rate_noise,
     rate_ramp,
     sine_trace,
+    skew_shift_trace,
     slowdown_trace,
 )
 
@@ -325,6 +327,188 @@ def test_controller_migration_pause_applies(cluster):
     w = int(np.flatnonzero(res.migrations)[0])
     assert res.migrations[w] > 0
     assert any(e == (w, f"replan:{int(res.migrations[w])}moves") for e in res.events)
+
+
+# ----------------------------------------------------- fields grouping
+
+
+# Pre-PR executor fingerprints of shuffle-grouping golden runs: the keyed
+# arrival path must leave even-split runs bit-identical (ISSUE 5
+# acceptance). Recorded from commit 12cf43e (before fields grouping).
+_SHUFFLE_GOLDEN_FPS = {
+    ("linear", "burst"): "26fc286367d2ab03eba1c45d9417a04b",
+    ("linear", "ramp"): "ca9542d22a245bc90ba588543f47f041",
+    ("rolling_count", "burst"): "2b6e1b64c419dd53f37337ab3c5e45e3",
+    ("rolling_count", "ramp"): "c160b175553ae57f70c3e0a9cdf263eb",
+}
+
+
+def test_shuffle_fingerprints_bit_identical_to_pre_keyed_runtime(cluster):
+    """Shuffle grouping must reproduce the pre-fields-grouping executor
+    bit-identically: fingerprints pinned before the keyed routing landed."""
+    for topo in (linear_topology(), rolling_count_topology()):
+        full = refine(
+            schedule(topo, cluster, r0=1.0, rate_epsilon=0.05).etg, cluster
+        )
+        burst = StreamExecutor(
+            full.etg, cluster, burst_trace(full.rate * 0.8, n_windows=100, jitter=4),
+            seed=11,
+        ).run()
+        ramp = StreamExecutor(
+            full.etg, cluster,
+            ramp_trace(0.3 * full.rate, 1.5 * full.rate, n_windows=120),
+            seed=3,
+        ).run()
+        assert burst.fingerprint() == _SHUFFLE_GOLDEN_FPS[(topo.name, "burst")]
+        assert ramp.fingerprint() == _SHUFFLE_GOLDEN_FPS[(topo.name, "ramp")]
+
+
+@pytest.fixture(scope="module")
+def keyed_setup(cluster):
+    """Keyed topology + even-split schedule + the initial skew view."""
+    utg = keyed_rolling_count_topology(n_keys=16, zipf_s=1.5)
+    etg = schedule(utg, cluster, r0=1.0, rate_epsilon=0.05).etg
+    probe = StreamExecutor(
+        etg, cluster, TraceSpec(name="probe", n_windows=2, base_rate=1.0), seed=5
+    )
+    skew = probe.skew_model_at(0)
+    r_skew, _ = max_stable_rate(etg, cluster, skew=skew)
+    r_even, _ = max_stable_rate(etg, cluster)
+    return utg, etg, skew, r_skew, r_even
+
+
+def test_keyed_run_deterministic_and_skew_bound_holds(cluster, keyed_setup):
+    """Keyed runs are bit-deterministic, sustain below the skew-aware R*
+    without back-pressure, and saturate between the skew-aware and the
+    even-split bound — the even split over-reports keyed capacity."""
+    utg, etg, skew, r_skew, r_even = keyed_setup
+    assert r_skew < 0.8 * r_even  # the hot key costs real capacity
+    spec = TraceSpec(name="under", n_windows=80, base_rate=0.9 * r_skew)
+    a = StreamExecutor(etg, cluster, spec, seed=5).run()
+    b = StreamExecutor(etg, cluster, spec, seed=5).run()
+    assert a.fingerprint() == b.fingerprint()
+    assert StreamExecutor(etg, cluster, spec, seed=6).run().fingerprint() != (
+        a.fingerprint()
+    )
+    assert np.all(a.throttle == 1.0) and a.dropped.sum() == 0.0
+    # Above the skew bound (but below even-split R*) a hot instance
+    # saturates its machine and back-pressure eventually trips.
+    mid = 0.5 * (r_skew + r_even)
+    hot = StreamExecutor(
+        etg, cluster, TraceSpec(name="over", n_windows=400, base_rate=mid), seed=5,
+        config=RuntimeConfig(max_queue=120.0),
+    ).run()
+    assert hot.throttle.min() < 1.0
+    assert np.all(hot.machine_util <= cluster.capacity[None, :] + 1e-9)
+
+
+def test_keyed_trace_must_cover_groupings(cluster, keyed_setup):
+    """A compiled trace without the topology's key realizations is
+    rejected (silent even-split fallback would fake keyed results)."""
+    utg, etg, *_ = keyed_setup
+    spec = TraceSpec(name="plain", n_windows=20, base_rate=1.0)
+    bare = spec.compile(cluster, seed=0)  # compiled without utg
+    with pytest.raises(ValueError, match="fields groupings"):
+        StreamExecutor(etg, cluster, bare)
+    with pytest.raises(ValueError, match="fields groupings"):
+        evaluate_policies_batch(
+            etg, cluster, [bare], etg.task_machine()[None, :], backend="numpy"
+        )
+
+
+def test_eval_backends_agree_1e9_keyed(cluster, keyed_setup):
+    """ISSUE 5 parity satellite: the lax.scan evaluator with per-key
+    routing matrices matches the Python executor on keyed traces (B×P
+    sweep, <= 1e-9)."""
+    pytest.importorskip("jax")
+    utg, etg, skew, r_skew, r_even = keyed_setup
+    rr = round_robin_schedule(utg, cluster, etg.n_instances)
+    policies = np.stack(
+        [etg.task_machine(), rr.task_machine(), etg.task_machine()[::-1].copy()]
+    )
+    traces = [
+        TraceSpec(name="flat", n_windows=120, base_rate=0.8 * r_skew).compile(
+            cluster, seed=1, utg=utg
+        ),
+        skew_shift_trace(0.9 * r_skew, n_windows=120).compile(cluster, seed=2, utg=utg),
+        ramp_trace(0.3 * r_skew, 1.3 * r_even, n_windows=120).compile(
+            cluster, seed=3, utg=utg
+        ),
+    ]
+    a = evaluate_policies_batch(etg, cluster, traces, policies, backend="numpy")
+    b = evaluate_policies_batch(etg, cluster, traces, policies, backend="jax")
+    for field in (
+        "throughput", "admitted", "dropped", "queue_total", "throttle",
+        "machine_util_mean", "sustained",
+    ):
+        x, y = getattr(a, field), getattr(b, field)
+        assert np.allclose(x, y, rtol=1e-9, atol=1e-9), field
+
+
+def test_controller_recovers_keyed_hot_instance(cluster, keyed_setup):
+    """The ISSUE 5 acceptance scenario: offered load between the skew
+    bound and the even-split bound saturates a hot instance; the static
+    even-split schedule backs off, the skew-aware controller replans
+    (relocate/grow priced at the realized key shares) and wins."""
+    utg, etg, skew, r_skew, r_even = keyed_setup
+    cfg = RuntimeConfig(max_queue=120.0)
+    spec = TraceSpec(name="hotkeys", n_windows=240, base_rate=0.95 * r_even)
+    static = StreamExecutor(etg, cluster, spec, seed=5, config=cfg).run()
+    ctl = OnlineController(utg, cluster, period=10)
+    online = StreamExecutor(etg, cluster, spec, seed=5, config=cfg).run(
+        controller=ctl
+    )
+    assert online.migrations.sum() > 0
+    assert online.sustained_throughput() > 1.15 * static.sustained_throughput()
+
+
+def test_controller_skew_shift_trigger(cluster, keyed_setup):
+    """A key_skew_shift bumps the trace's skew epoch and shows up as a
+    drift trigger even when rate and capacity never change."""
+    utg, etg, skew, r_skew, _ = keyed_setup
+    spec = skew_shift_trace(0.7 * r_skew, n_windows=160)
+    ctl = OnlineController(utg, cluster, period=8)
+    StreamExecutor(
+        etg, cluster, spec, seed=11, config=RuntimeConfig(max_queue=120.0)
+    ).run(controller=ctl)
+    assert any("skew_shift" in why for _, why in ctl.log)
+
+
+# ------------------------------------------------- measurement noise (§6.2)
+
+
+def test_noisy_observations_hold_no_churn_guarantee(cluster, refined):
+    """ISSUE 5 satellite (ROADMAP open item 4): with the §6.2 measurement
+    model on the controller's observation path, steady state below R*
+    must stay churn-free — noise can fire spurious triggers, but the
+    demand-capped cost/benefit guard rejects every replan."""
+    topo = linear_topology()
+    spec = TraceSpec(name="flat", n_windows=120, base_rate=refined.rate * 0.5)
+    ctl = OnlineController(topo, cluster, period=8, measure_noise=0.05, noise_seed=7)
+    res = StreamExecutor(refined.etg, cluster, spec).run(controller=ctl)
+    assert res.migrations.sum() == 0
+    assert res.final_etg.task_machine().tolist() == (
+        refined.etg.task_machine().tolist()
+    )
+    # The noise is per-window seeded: the same run reproduces bit-identically.
+    ctl2 = OnlineController(topo, cluster, period=8, measure_noise=0.05, noise_seed=7)
+    res2 = StreamExecutor(refined.etg, cluster, spec).run(controller=ctl2)
+    assert res2.fingerprint() == res.fingerprint()
+    assert ctl2.log == ctl.log
+
+
+def test_noisy_observations_still_detect_real_drift(cluster):
+    """Noise must not mask real drift: the machine-failure recovery of
+    test_controller_recovers_from_machine_failure still holds with the
+    §6.2 observation model enabled."""
+    topo = linear_topology()
+    full = refine(schedule(topo, cluster, r0=1.0, rate_epsilon=0.05).etg, cluster)
+    spec = failure_trace(full.rate * 0.85, machine=2, n_windows=120)
+    static = StreamExecutor(full.etg, cluster, spec).run()
+    ctl = OnlineController(topo, cluster, period=6, measure_noise=0.05)
+    online = StreamExecutor(full.etg, cluster, spec).run(controller=ctl)
+    assert online.sustained_throughput() > 1.2 * static.sustained_throughput()
+    assert np.all(online.final_etg.task_machine() != 2)
 
 
 # -------------------------------------------------- adaptive growth menu
