@@ -330,17 +330,19 @@ def max_stable_rate_batch(
       task_machine: (B, T) machine index per task per candidate placement.
       backend: ``"numpy"`` (default; the reference floats — the refine and
         optimal engines' equivalence guarantees rely on it), ``"jax"``
-        (jitted float64 closed form, ~1e-15 relative agreement; falls back
-        to NumPy when JAX is unavailable — worthwhile for very large B), or
-        ``"auto"`` (JAX above the calibrated element-count crossover, see
+        (jitted float64 scatter-free closed form, ~1e-15 relative
+        agreement; falls back to NumPy when JAX is unavailable), or
+        ``"auto"`` (JAX above the regime's calibrated element-count
+        crossover, machine-count gated on CPU — see
         ``simulator.resolve_closed_form_backend`` / benchmarks/bench_dispatch.py).
       n_instances: optional (B, n) per-row instance-count matrix overriding
         ``etg.n_instances`` row by row (every row must sum to T). Lets one
         sweep score candidates that grow/shrink *different* components.
       skew: optional fields-grouping load model; keyed components score at
         their realized per-instance fractions instead of the even split.
-        Skew scoring always runs the NumPy reference floats (the jitted
-        kernel has no skew path).
+        Skew rows dispatch like everything else (the jitted kernel is
+        skew-agnostic — skew only changes the unit-rate values) under the
+        ``"skew"`` crossover regime.
 
     Returns:
       (rates, throughputs), each (B,).
@@ -348,11 +350,23 @@ def max_stable_rate_batch(
     from repro.core.simulator import resolve_closed_form_backend
 
     task_machine = np.asarray(task_machine, dtype=np.int64)
+    n_machines = cluster.capacity.shape[0]
     if skew is not None:
         if skew.utg is not etg.utg:
             raise ValueError("skew model was built for a different topology")
         if task_machine.ndim != 2:
             raise ValueError("task_machine must be (B, T)")
+        if (
+            resolve_closed_form_backend(
+                backend, task_machine.size, regime="skew", n_machines=n_machines
+            )
+            == "jax"
+        ):
+            from repro.core.sim_jax import max_stable_rate_batch_jax
+
+            return max_stable_rate_batch_jax(
+                etg, cluster, task_machine, n_instances=n_instances, skew=skew
+            )
         if n_instances is not None:
             n_inst_bn = np.asarray(n_instances, dtype=np.int64)
             comp, _ = per_row_task_maps(
@@ -368,7 +382,15 @@ def max_stable_rate_batch(
         e = cluster.profile.e[task_types, mtypes]
         met = cluster.profile.met[task_types, mtypes]
         return closed_form_rates(task_machine, e, met, unit_ir, cluster.capacity)
-    if resolve_closed_form_backend(backend, task_machine.size) == "jax":
+    if (
+        resolve_closed_form_backend(
+            backend,
+            task_machine.size,
+            regime="per_row" if n_instances is not None else "shared",
+            n_machines=n_machines,
+        )
+        == "jax"
+    ):
         from repro.core.sim_jax import max_stable_rate_batch_jax
 
         return max_stable_rate_batch_jax(

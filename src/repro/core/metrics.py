@@ -26,11 +26,14 @@ def per_machine_utilization(
 
     The one accumulation shared by eq. 7's weighting, the simulator readout
     and the streaming runtime's windowed metrics, so "machine utilization"
-    means the same reduction everywhere.
+    means the same reduction everywhere. ``np.bincount`` accumulates
+    sequentially in input order exactly like ``np.add.at`` (the streaming
+    fingerprint goldens pin the bit-identity) but without the per-element
+    ufunc dispatch — this runs three times per executor window.
     """
-    util = np.zeros(n_machines, dtype=np.float64)
-    np.add.at(util, machine, tcu)
-    return util
+    return np.bincount(
+        machine, weights=np.asarray(tcu, dtype=np.float64), minlength=n_machines
+    )
 
 
 def weighted_utilization(

@@ -337,19 +337,20 @@ def optimal_schedule(
         pruned wholesale); an original-rank tie-break keeps the reported
         placement identical to the original-order search's. Exact: the
         returned optimum is unchanged, and under bit-exact scoring
-        (``backend="numpy"``, or ``"auto"`` below the dispatch crossover —
-        every test scenario) both engines prune identically so
+        (``backend="numpy"``, or ``"auto"`` below the per-regime dispatch
+        crossovers — every test scenario) both engines prune identically so
         ``candidates_evaluated`` still matches. The engines chunk sweeps
-        differently, so if ``"auto"`` resolves JAX for some sweeps
-        (accelerator hosts, very large classes) their ~1e-15 scores may
-        break exact ties differently. ``classes_pruned`` on the result
-        counts the skips.
+        differently, so if ``"auto"`` resolves JAX for some sweeps (very
+        large classes clearing the element floor + machine gate) their
+        ~1e-15 scores may break exact ties differently. ``classes_pruned``
+        on the result counts the skips.
       engine: ``"state"`` (vectorized enumeration + filters, default) or
         ``"reference"`` (original per-candidate loop). Identical results.
       backend: closed-form scoring backend forwarded to
         ``max_stable_rate_batch`` — ``"auto"`` (default: NumPy below the
-        calibrated dispatch crossover, JAX above), ``"numpy"`` (the
-        reference floats), or ``"jax"`` (jitted float64, ~1e-15 agreement).
+        regime's calibrated dispatch crossover, scatter-free JAX above),
+        ``"numpy"`` (the reference floats), or ``"jax"`` (jitted float64,
+        ~1e-15 agreement).
       seed_incumbent: start the beam bound from ``schedule()+refine()``'s
         throughput (a valid lower bound — it is a real placement) so
         pruning bites from the very first class. Only applies with

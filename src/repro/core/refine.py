@@ -30,12 +30,14 @@ all components/pairs advance in depth-lockstep per-row-count sweeps (4 per
 round), and every NumPy-scored candidate's score is bit-identical to the
 reference path's scalar ``max_stable_rate``, so the two engines provably
 choose the same moves. The default ``backend="auto"`` preserves that
-contract below the calibrated dispatch crossover — which covers every
-golden/equivalence-suite sweep by construction — and above it trades
-bit-exactness for the jitted JAX scorer (~1e-15 agreement: exact ties
-between moves may break differently from ``engine="reference"``, with
+contract below the per-regime dispatch crossovers (shared / per-row /
+skew element floors plus a CPU machine-count gate, calibrated by
+benchmarks/bench_dispatch.py) — which cover every golden/equivalence-suite
+sweep by construction — and above them trades bit-exactness for the
+scatter-free jitted JAX scorer (~1e-15 agreement: exact ties between
+moves may break differently from ``engine="reference"``, with
 equal-quality results; pass ``backend="numpy"`` to keep strict
-replayability on accelerator hosts). ``engine="reference"`` keeps the
+replayability on hosts where sweeps cross). ``engine="reference"`` keeps the
 original copy-and-score implementation as the semantic reference for the
 golden equivalence tests (``tests/test_sched_equivalence.py``).
 

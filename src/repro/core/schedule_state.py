@@ -305,9 +305,11 @@ class ScheduleState:
             one sweep). Per-row scores are bit-identical to scoring each
             row against its own shared-count template.
           backend: ``"numpy"`` (reference floats), ``"jax"`` (jitted
-            float64 closed form, ~1e-15 relative agreement; falls back to
-            NumPy when JAX is unavailable), or ``"auto"`` (JAX above the
-            calibrated element-count crossover).
+            float64 scatter-free closed form, ~1e-15 relative agreement;
+            falls back to NumPy when JAX is unavailable), or ``"auto"``
+            (JAX above the regime's calibrated element-count crossover,
+            machine-count gated on CPU — skew rows dispatch under the
+            ``"skew"`` regime; the jitted kernel is skew-agnostic).
         """
         n_inst = self.n_instances if n_instances is None else np.asarray(
             n_instances, dtype=np.int64
@@ -316,10 +318,13 @@ class ScheduleState:
         task_machine = np.asarray(task_machine, dtype=np.int64)
         if task_machine.ndim != 2:
             raise ValueError("task_machine must be (B, sum(n_instances))")
+        from repro.core.simulator import resolve_closed_form_backend
+
+        n_machines = self.cluster.capacity.shape[0]
         if self.skew is not None:
             # Skew-aware scoring: keyed components' unit IR comes from the
-            # realized per-instance fractions (NumPy floats only — the
-            # jitted kernel has no skew path, so ``backend`` is ignored).
+            # realized per-instance fractions; the gathers below feed the
+            # same closed-form core either backend runs.
             if n_inst.ndim == 2:
                 if n_inst.shape != (task_machine.shape[0], n):
                     raise ValueError("per-row n_instances must be (B, n)")
@@ -334,6 +339,25 @@ class ScheduleState:
                     raise ValueError("task_machine must be (B, sum(n_instances))")
                 unit_ir = self.skew.per_task_unit_ir(n_inst)
                 gather_comp = comp[None, :]
+            if (
+                resolve_closed_form_backend(
+                    backend,
+                    task_machine.size,
+                    regime="skew",
+                    n_machines=n_machines,
+                )
+                == "jax"
+            ):
+                from repro.core.sim_jax import closed_form_rates_jax
+
+                return closed_form_rates_jax(
+                    task_machine,
+                    comp,
+                    unit_ir,
+                    self.e_cm,
+                    self.met_cm,
+                    self.cluster.capacity,
+                )
             e = self.e_cm[gather_comp, task_machine]
             met = self.met_cm[gather_comp, task_machine]
             return cost_model.closed_form_rates(
@@ -354,9 +378,15 @@ class ScheduleState:
             # instance_rates()' per-task division exactly, so floats agree.
             unit_ir = (self.cir_unit / n_inst)[comp]
             gather_comp = comp[None, :]
-        from repro.core.simulator import resolve_closed_form_backend
-
-        if resolve_closed_form_backend(backend, task_machine.size) == "jax":
+        if (
+            resolve_closed_form_backend(
+                backend,
+                task_machine.size,
+                regime="per_row" if n_inst.ndim == 2 else "shared",
+                n_machines=n_machines,
+            )
+            == "jax"
+        ):
             from repro.core.sim_jax import closed_form_rates_jax
 
             return closed_form_rates_jax(

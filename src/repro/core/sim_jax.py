@@ -204,15 +204,26 @@ def _msr_kernel(per_row: bool = False):
 
     Mirrors ``cost_model.max_stable_rate_batch``'s NumPy math: per-machine
     utilization is ``met_w + R * var_w``, so the binding machine gives
-    ``R* = min_w (cap_w - met_w) / var_w``. Scatter-add association differs
-    from NumPy's sequential ``np.add.at``, so agreement is ~1e-15 relative,
-    not bit-exact — the NumPy backend stays the reference.
+    ``R* = min_w (cap_w - met_w) / var_w``.
+
+    The per-machine accumulation is **scatter-free**: instead of XLA's
+    scatter-add (serial scalar updates on CPU — 0.2-0.4x NumPy's
+    ``np.add.at`` at every measured size, see BENCH_dispatch.json), the
+    one-hot membership tensor is laid out (B, m, T) and both accumulators
+    reduce over the innermost task axis, which XLA fuses into a vectorized
+    compare-select-sum. The contraction does B*T*m element ops versus the
+    scatter's B*T, so it wins only while the machine count stays small —
+    exactly the regime ``simulator.resolve_closed_form_backend`` dispatches
+    to it (the auto machine-count gate; NumPy keeps wide clusters).
+    Summation association differs from NumPy's sequential ``np.add.at``, so
+    agreement is ~1e-15 relative, not bit-exact — the NumPy backend stays
+    the reference.
 
     Two cached variants: ``per_row=False`` takes shared (T,) ``comp`` /
     ``unit_ir`` maps (every row one instance-count vector — no point
     shipping B identical copies to the device); ``per_row=True`` takes
     (B, T) maps so rows may carry different count vectors (lockstep growth
-    batches).
+    batches) or per-row skew-realized unit rates.
     """
     import jax
     import jax.numpy as jnp
@@ -221,16 +232,18 @@ def _msr_kernel(per_row: bool = False):
     def kernel(task_machine, comp, unit_ir, e_cm, met_cm, capacity):
         B, T = task_machine.shape
         m = capacity.shape[0]
-        rows = jnp.arange(B)[:, None]
         cmap = comp if per_row else comp[None, :]
         e = e_cm[cmap, task_machine]                 # (B, T)
         met = met_cm[cmap, task_machine]
-        var_w = (
-            jnp.zeros((B, m), dtype=e.dtype)
-            .at[rows, task_machine]
-            .add(e * (unit_ir if per_row else unit_ir[None, :]))
+        ev = e * (unit_ir if per_row else unit_ir[None, :])
+        # One-hot contraction, (B, m, T) layout: membership of task t on
+        # machine w, reduced over the innermost t axis. No scatter anywhere.
+        onehot = (
+            task_machine[:, None, :]
+            == jnp.arange(m, dtype=task_machine.dtype)[None, :, None]
         )
-        met_w = jnp.zeros((B, m), dtype=e.dtype).at[rows, task_machine].add(met)
+        var_w = jnp.sum(jnp.where(onehot, ev[:, None, :], 0.0), axis=-1)
+        met_w = jnp.sum(jnp.where(onehot, met[:, None, :], 0.0), axis=-1)
         head = capacity[None, :] - met_w
         infeasible = jnp.any(head < 0.0, axis=1)
         limits = jnp.where(var_w > 0.0, head / jnp.maximum(var_w, 1e-300), jnp.inf)
@@ -242,6 +255,25 @@ def _msr_kernel(per_row: bool = False):
     return kernel
 
 
+@functools.cache
+def _use_pallas_scoring() -> bool:
+    """Route closed-form scoring through the Pallas segmented-reduce kernel
+    (``repro.kernels.sched_scoring``). On by default on TPU backends; force
+    with ``REPRO_SCHED_SCORING_PALLAS=1`` (compiled) / ``=interpret``
+    (interpreter — CPU-testable, slow) / ``=0`` (off)."""
+    import os
+
+    env = os.environ.get("REPRO_SCHED_SCORING_PALLAS")
+    if env is not None:
+        return env not in ("0", "")
+    try:
+        import jax
+
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
 def closed_form_rates_jax(
     task_machine: np.ndarray,
     comp: np.ndarray,
@@ -250,13 +282,25 @@ def closed_form_rates_jax(
     met_cm: np.ndarray,
     capacity: np.ndarray,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """JAX twin of ``cost_model.closed_form_rates``.
+    """JAX twin of ``cost_model.closed_form_rates`` (scatter-free).
 
     ``comp`` / ``unit_ir`` may be (T,) shared maps or (B, T) per-row maps;
-    each shape routes to its own cached kernel variant.
+    each shape routes to its own cached kernel variant. On TPU backends (or
+    under ``REPRO_SCHED_SCORING_PALLAS``) the accumulation runs the Pallas
+    segmented-reduce kernel instead of the XLA contraction.
     """
+    import os
+
     from jax.experimental import enable_x64
 
+    if _use_pallas_scoring():
+        from repro.kernels.sched_scoring.ops import closed_form_rates_sched
+
+        interpret = os.environ.get("REPRO_SCHED_SCORING_PALLAS") == "interpret"
+        return closed_form_rates_sched(
+            task_machine, comp, unit_ir, e_cm, met_cm, capacity,
+            impl="interpret" if interpret else "pallas",
+        )
     with enable_x64():
         rates, thpt = _msr_kernel(per_row=comp.ndim == 2)(
             task_machine, comp, unit_ir, e_cm, met_cm, capacity
@@ -269,25 +313,39 @@ def max_stable_rate_batch_jax(
     cluster: Cluster,
     task_machine: np.ndarray,
     n_instances: np.ndarray | None = None,
+    skew=None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """JAX backend for ``cost_model.max_stable_rate_batch`` (same contract,
-    including the optional (B, n) per-row ``n_instances`` matrix)."""
+    including the optional (B, n) per-row ``n_instances`` matrix and the
+    optional ``skew`` model — skew rows score through the same jitted
+    kernel, fed the skew-realized unit rates instead of the even split)."""
     from repro.core import cost_model
 
     utg = etg.utg
     task_machine = np.asarray(task_machine, dtype=np.int64)
     if task_machine.ndim != 2:
         raise ValueError("task_machine must be (B, T)")
+    if skew is not None and skew.utg is not utg:
+        raise ValueError("skew model was built for a different topology")
     if n_instances is not None:
-        cir_unit = cost_model.component_rates(utg, 1.0)
-        comp, unit_ir = cost_model.per_row_task_maps(
-            cir_unit, n_instances, task_machine.shape[1]
+        n_inst_bn = np.asarray(n_instances, dtype=np.int64)
+        cir_unit = skew.cir_unit if skew is not None else (
+            cost_model.component_rates(utg, 1.0)
         )
+        comp, unit_ir = cost_model.per_row_task_maps(
+            cir_unit, n_inst_bn, task_machine.shape[1]
+        )
+        if skew is not None:
+            unit_ir = skew.per_row_unit_ir(n_inst_bn)
     else:
         comp = etg.task_component()
         if task_machine.shape[1] != comp.shape[0]:
             raise ValueError("task_machine must be (B, T)")
-        unit_ir = cost_model.instance_rates(etg, 1.0)
+        unit_ir = (
+            skew.per_task_unit_ir(etg.n_instances)
+            if skew is not None
+            else cost_model.instance_rates(etg, 1.0)
+        )
     ttypes = utg.component_types
     e_cm = cluster.profile.e[ttypes][:, cluster.machine_types]
     met_cm = cluster.profile.met[ttypes][:, cluster.machine_types]

@@ -112,17 +112,41 @@ def _jax_available() -> bool:
         return False
 
 
-# Element floor (B*T per sweep) below which "auto" never considers JAX for
-# the closed-form scorers, calibrated by benchmarks/bench_dispatch.py (see
-# BENCH_dispatch.json). The measured picture on a CPU-only host (2 cores):
-# the jitted scatter-add kernel is 0.2-0.4x NumPy's np.add.at accumulation
-# at *every* size up to 10M elements — XLA's CPU scatter is serial — so on
-# CPU backends "auto" always resolves to the bit-exact NumPy reference. On
-# accelerator backends (GPU/TPU, where the scatter is parallel) sweeps of
-# at least this many elements route to JAX; below it, per-call dispatch
-# dominates any win. Recalibrate with bench_dispatch.py and override via
-# REPRO_CLOSED_FORM_JAX_THRESHOLD (elements) when the measurement moves.
-_CLOSED_FORM_AUTO_THRESHOLD = 200_000
+# Per-regime element floors (B*T per sweep) below which "auto" never
+# considers JAX for the closed-form scorers, calibrated by
+# benchmarks/bench_dispatch.py (see BENCH_dispatch.json). Since the scorer
+# went scatter-free (``sim_jax._msr_kernel``'s one-hot contraction — XLA's
+# serial CPU scatter-add never won), the JAX path beats NumPy 2-6x on CPU
+# for paper-realistic machine counts once the sweep amortizes dispatch.
+# The floors sit above the largest sweep the golden refine/optimal suites
+# issue (measured by instrumenting this resolver under the full tier-1 +
+# slow runs: 98,304 shared / 8,800 per-row / 960 skew elements), so
+# reference results stay bit-identical by construction; the bench's
+# realistic scenarios (B*T >= ~230k at B=16384) clear them. The contraction does B*T*m work versus NumPy's B*T, so wide
+# clusters flip the verdict — ``_AUTO_MAX_MACHINES`` gates those back to
+# NumPy on CPU (accelerators keep parallel reductions, no gate). Skew rows
+# run the same kernel (skew only changes the unit-rate values), sharing the
+# measured per-row crossover. Recalibrate with bench_dispatch.py when the
+# host changes; override via REPRO_CLOSED_FORM_JAX_THRESHOLD (all regimes)
+# or REPRO_CLOSED_FORM_JAX_THRESHOLD_{SHARED,PER_ROW,SKEW}.
+_CLOSED_FORM_AUTO_THRESHOLDS = {
+    "shared": 131_072,
+    "per_row": 65_536,
+    "skew": 65_536,
+}
+
+# CPU-only machine-count gate for "auto": the dense contraction's B*T*m
+# cost loses to NumPy's serial B*T scatter on wide clusters (measured 180
+# machines: 0.03-0.4x across nine formulations). Bench large scenario (15
+# machines) still wins, the stress scenario (180) documents the loss.
+_AUTO_MAX_MACHINES = 32
+
+# CPU-only work ceiling for "auto", in B*T*m products: past it the one-hot
+# intermediates fall out of cache and the contraction collapses even on
+# mid-width clusters (measured on the 15-machine scenario: 1.2-1.3x NumPy
+# at 3.3M products, 0.35x at 13.3M). Between the floors and this ceiling
+# the contraction wins at every measured grid point.
+_AUTO_MAX_WORK = 6_000_000
 
 
 @functools.cache
@@ -138,23 +162,34 @@ def _jax_accelerator_available() -> bool:
         return False
 
 
-def _closed_form_auto_threshold() -> float:
-    """Current "auto" crossover in elements (inf = never pick JAX).
+def _closed_form_auto_threshold(regime: str = "shared") -> tuple[float, bool]:
+    """Current "auto" crossover in elements for one scoring regime.
 
-    ``REPRO_CLOSED_FORM_JAX_THRESHOLD`` overrides unconditionally (set it
-    after recalibrating bench_dispatch.py on new hardware, or to force the
-    JAX path in tests); otherwise the calibrated floor applies only when an
-    accelerator backend is present — measured CPU-only hosts never cross.
+    Returns ``(threshold, overridden)``. ``REPRO_CLOSED_FORM_JAX_THRESHOLD``
+    overrides every regime; ``REPRO_CLOSED_FORM_JAX_THRESHOLD_<REGIME>``
+    (SHARED / PER_ROW / SKEW) wins over both for its regime. An env
+    override also bypasses the machine-count gate (set one after
+    recalibrating bench_dispatch.py on new hardware, or to force the JAX
+    path in tests); otherwise the calibrated per-regime floor applies.
     """
     import os
 
-    env = os.environ.get("REPRO_CLOSED_FORM_JAX_THRESHOLD")
+    if regime not in _CLOSED_FORM_AUTO_THRESHOLDS:
+        raise ValueError(f"unknown scoring regime {regime!r}")
+    env = os.environ.get(f"REPRO_CLOSED_FORM_JAX_THRESHOLD_{regime.upper()}")
+    if env is None:
+        env = os.environ.get("REPRO_CLOSED_FORM_JAX_THRESHOLD")
     if env is not None:
-        return float(env)
-    return _CLOSED_FORM_AUTO_THRESHOLD if _jax_accelerator_available() else np.inf
+        return float(env), True
+    return float(_CLOSED_FORM_AUTO_THRESHOLDS[regime]), False
 
 
-def resolve_closed_form_backend(backend: str, elements: int | None = None) -> str:
+def resolve_closed_form_backend(
+    backend: str,
+    elements: int | None = None,
+    regime: str = "shared",
+    n_machines: int | None = None,
+) -> str:
     """Validate + resolve a closed-form scoring backend request.
 
     Shared by ``cost_model.max_stable_rate_batch`` and
@@ -165,19 +200,35 @@ def resolve_closed_form_backend(backend: str, elements: int | None = None) -> st
 
     Args:
       backend: ``"numpy"``, ``"jax"``, or ``"auto"`` (JAX iff the sweep
-        clears the calibrated element crossover — see
-        ``_closed_form_auto_threshold``).
+        clears the regime's calibrated element crossover and the cluster
+        passes the machine-count gate — see ``_closed_form_auto_threshold``).
       elements: batch size in B*T elements; required for ``"auto"`` to ever
         pick JAX (``None`` resolves to NumPy — the safe reference).
+      regime: which crossover table applies — ``"shared"`` ((T,) maps),
+        ``"per_row"`` ((B, T) maps), or ``"skew"`` (realized fields-grouping
+        rates; per-row shapes, separate calibration row in the bench).
+      n_machines: cluster width for the CPU contraction gates (the dense
+        one-hot does B*T*m work, so wide clusters and out-of-cache sweeps
+        stay NumPy). ``None`` skips the gates; internal scoring call sites
+        always pass it.
     """
     if backend not in ("numpy", "jax", "auto"):
         raise ValueError(f"unknown backend {backend!r}")
     if backend == "auto":
-        backend = (
-            "jax"
-            if elements is not None and elements >= _closed_form_auto_threshold()
-            else "numpy"
-        )
+        threshold, overridden = _closed_form_auto_threshold(regime)
+        if elements is None:
+            backend = "numpy"
+        else:
+            gate_ok = (
+                overridden
+                or n_machines is None
+                or _jax_accelerator_available()
+                or (
+                    n_machines <= _AUTO_MAX_MACHINES
+                    and elements * n_machines <= _AUTO_MAX_WORK
+                )
+            )
+            backend = "jax" if gate_ok and elements >= threshold else "numpy"
     return "jax" if backend == "jax" and _jax_available() else "numpy"
 
 

@@ -1,0 +1,122 @@
+"""Closed-form max-stable-rate scoring as a Pallas segmented-reduce kernel.
+
+The scorer's per-machine accumulators are a segmented reduction: each
+candidate row scatters T per-task loads onto m machines, then the binding
+machine sets R* = min_w (cap_w - met_w) / var_w (paper eq. 5 linearity).
+Scatter is serial on most backends, so the kernel goes scatter-free: a
+(block_b, m, block_t) one-hot membership compare reduced over the
+innermost task axis — the same contraction ``core.sim_jax._msr_kernel``
+asks XLA to fuse, here staged explicitly so the accumulators never leave
+VMEM.
+
+Grid = (n_b_blocks, n_t_blocks), task axis innermost/sequential. Both
+per-machine accumulators live in VMEM scratch across the task sweep; the
+final task block computes head/limits/feasibility and writes the (B,)
+rates. Inputs arrive pre-gathered (see ``ops.closed_form_rates_sched``):
+the kernel is skew-agnostic because skew only changes the ``ev`` values,
+never the reduction structure.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["sched_scoring_pallas"]
+
+
+def _kernel(
+    tm_ref,                      # (block_b, block_t) int32 task -> machine
+    ev_ref,                      # (block_b, block_t) e * unit_ir
+    met_ref,                     # (block_b, block_t) base load
+    cap_ref,                     # (1, m) capacities
+    o_ref,                       # (block_b, 1) rates out
+    var_ref, met_w_ref,          # VMEM (block_b, m) accumulators
+    *,
+    n_t_blocks: int,
+):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def init():
+        var_ref[...] = jnp.zeros_like(var_ref)
+        met_w_ref[...] = jnp.zeros_like(met_w_ref)
+
+    tm = tm_ref[...]
+    ev = ev_ref[...]
+    met = met_ref[...]
+    bb, bt = tm.shape
+    m = var_ref.shape[1]
+    # Segmented reduce without scatter: membership one-hot over machines,
+    # summed over the innermost task axis. Padded task slots carry tm == m
+    # and match no machine.
+    wid = jax.lax.broadcasted_iota(jnp.int32, (bb, m, bt), 1)
+    onehot = tm[:, None, :] == wid
+    var_ref[...] += jnp.sum(jnp.where(onehot, ev[:, None, :], 0.0), axis=-1)
+    met_w_ref[...] += jnp.sum(jnp.where(onehot, met[:, None, :], 0.0), axis=-1)
+
+    @pl.when(ti == n_t_blocks - 1)
+    def finalize():
+        var_w = var_ref[...]
+        met_w = met_w_ref[...]
+        head = cap_ref[0][None, :] - met_w
+        infeasible = jnp.any(head < 0.0, axis=1)
+        limits = jnp.where(
+            var_w > 0.0, head / jnp.maximum(var_w, 1e-300), jnp.inf
+        )
+        rates = jnp.clip(jnp.min(limits, axis=1), 0.0, None)
+        o_ref[...] = jnp.where(infeasible, 0.0, rates)[:, None].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_t", "interpret")
+)
+def sched_scoring_pallas(
+    task_machine: jax.Array,     # (B, T) int
+    ev: jax.Array,               # (B, T) e * unit_ir, float
+    met: jax.Array,              # (B, T) float
+    capacity: jax.Array,         # (m,) float
+    *,
+    block_b: int = 256,
+    block_t: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """(B,) max stable rates; B == 0 must be handled by the caller."""
+    B, T = task_machine.shape
+    m = capacity.shape[0]
+    bb = min(block_b, B)
+    bt = min(block_t, T)
+    n_b = -(-B // bb)
+    n_t = -(-T // bt)
+    pad_b = n_b * bb - B
+    pad_t = n_t * bt - T
+    tm = task_machine.astype(jnp.int32)
+    if pad_b or pad_t:
+        # Pad tasks with machine id m (matches no one-hot lane); padded
+        # rows reduce to var_w == 0 and are sliced away below.
+        tm = jnp.pad(tm, ((0, pad_b), (0, pad_t)), constant_values=m)
+        ev = jnp.pad(ev, ((0, pad_b), (0, pad_t)))
+        met = jnp.pad(met, ((0, pad_b), (0, pad_t)))
+    kernel = functools.partial(_kernel, n_t_blocks=n_t)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_b, n_t),
+        in_specs=[
+            pl.BlockSpec((bb, bt), lambda bi, ti: (bi, ti)),
+            pl.BlockSpec((bb, bt), lambda bi, ti: (bi, ti)),
+            pl.BlockSpec((bb, bt), lambda bi, ti: (bi, ti)),
+            pl.BlockSpec((1, m), lambda bi, ti: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, 1), lambda bi, ti: (bi, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_b * bb, 1), ev.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bb, m), ev.dtype),
+            pltpu.VMEM((bb, m), ev.dtype),
+        ],
+        interpret=interpret,
+    )(tm, ev, met, capacity.reshape(1, m))
+    return out[:B, 0]

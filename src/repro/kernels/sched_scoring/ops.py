@@ -1,0 +1,70 @@
+"""Dispatch + host-side gather for the scheduling-score Pallas kernel.
+
+``closed_form_rates_sched`` is drop-in compatible with
+``core.sim_jax.closed_form_rates_jax``: same (task_machine, comp, unit_ir,
+e_cm, met_cm, capacity) surface covering all three scoring regimes —
+shared (T,) maps, per-row (B, T) maps, and skew rows (which only differ in
+the ``unit_ir`` values). The component->machine profile gather and the
+throughput reduction happen on the host; the kernel sees pre-gathered
+(B, T) tiles.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.sched_scoring.ref import sched_scoring_ref
+
+__all__ = ["closed_form_rates_sched"]
+
+
+def closed_form_rates_sched(
+    task_machine: np.ndarray,
+    comp: np.ndarray,
+    unit_ir: np.ndarray,
+    e_cm: np.ndarray,
+    met_cm: np.ndarray,
+    capacity: np.ndarray,
+    impl: str = "auto",
+) -> tuple[np.ndarray, np.ndarray]:
+    """(rates, throughputs) over B candidate rows.
+
+    Args:
+      task_machine: (B, T) machine index per task.
+      comp / unit_ir: (T,) shared or (B, T) per-row task maps.
+      e_cm / met_cm: (n_components, n_machines) profile slices.
+      impl: ``"pallas"`` (compiled), ``"interpret"`` (Pallas interpreter —
+        CPU-testable), ``"ref"`` (NumPy oracle), or ``"auto"`` (pallas on
+        TPU, ref elsewhere).
+    """
+    task_machine = np.asarray(task_machine, dtype=np.int64)
+    per_row = comp.ndim == 2
+    cmap = comp if per_row else comp[None, :]
+    e = e_cm[cmap, task_machine]                       # (B, T)
+    met = met_cm[cmap, task_machine]
+    ev = e * (unit_ir if per_row else unit_ir[None, :])
+    B = task_machine.shape[0]
+    if B == 0:
+        return np.zeros(0), np.zeros(0)
+    if impl == "auto":
+        import jax
+
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl in ("pallas", "interpret"):
+        from jax.experimental import enable_x64
+
+        from repro.kernels.sched_scoring.kernel import sched_scoring_pallas
+
+        with enable_x64():
+            rates = np.asarray(
+                sched_scoring_pallas(
+                    task_machine, ev, met, capacity,
+                    interpret=impl == "interpret",
+                )
+            )
+    elif impl == "ref":
+        rates = sched_scoring_ref(task_machine, ev, met, capacity)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    thpt = rates * (unit_ir.sum(axis=1) if per_row else unit_ir.sum())
+    return rates, thpt

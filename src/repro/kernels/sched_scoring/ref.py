@@ -1,0 +1,37 @@
+"""NumPy oracle for the scheduling-score kernel (pre-gathered operands).
+
+Same math as ``core.cost_model.closed_form_rates`` but on the kernel's
+input surface — task->machine ids plus already-gathered ``ev`` / ``met``
+tiles — so Pallas parity tests compare against exactly what the kernel was
+fed, independent of the host-side gather.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["sched_scoring_ref"]
+
+
+def sched_scoring_ref(
+    task_machine: np.ndarray,    # (B, T) int
+    ev: np.ndarray,              # (B, T) e * unit_ir
+    met: np.ndarray,             # (B, T)
+    capacity: np.ndarray,        # (m,)
+) -> np.ndarray:
+    """(B,) max stable rates via sequential ``np.add.at`` accumulation."""
+    task_machine = np.asarray(task_machine, dtype=np.int64)
+    B, T = task_machine.shape
+    m = capacity.shape[0]
+    rows = np.repeat(np.arange(B), T)
+    cols = task_machine.reshape(-1)
+    var_w = np.zeros((B, m), dtype=np.float64)
+    met_w = np.zeros((B, m), dtype=np.float64)
+    np.add.at(var_w, (rows, cols), np.asarray(ev, dtype=np.float64).reshape(-1))
+    np.add.at(met_w, (rows, cols), np.asarray(met, dtype=np.float64).reshape(-1))
+    head = capacity[None, :] - met_w
+    infeasible = np.any(head < 0.0, axis=1)
+    with np.errstate(divide="ignore", over="ignore"):
+        limits = np.where(var_w > 0.0, head / np.maximum(var_w, 1e-300), np.inf)
+    rates = np.min(limits, axis=1) if m else np.full(B, np.inf)
+    return np.where(infeasible, 0.0, np.clip(rates, 0.0, None))

@@ -303,8 +303,9 @@ class StreamExecutor:
             alive = (cap > 0.0).astype(np.float64)
             tcu = place.e * processed + place.met * active * alive[place.machine]
 
-            prev_out = np.zeros(n, dtype=np.float64)
-            np.add.at(prev_out, place.comp, processed)
+            # bincount == np.add.at bit-for-bit (sequential input-order
+            # accumulation), minus the per-window ufunc dispatch cost.
+            prev_out = np.bincount(place.comp, weights=processed, minlength=n)
 
             # 3. Metrics + spout back-pressure for the next window.
             admitted[t] = r_adm
@@ -392,9 +393,9 @@ class StreamExecutor:
 
     @staticmethod
     def _component_backlog(place: _Placement, backlog: np.ndarray) -> np.ndarray:
-        out = np.zeros(place.n_inst.shape[0], dtype=np.float64)
-        np.add.at(out, place.comp, backlog)
-        return out
+        return np.bincount(
+            place.comp, weights=backlog, minlength=place.n_inst.shape[0]
+        )
 
     def _migrate(
         self, place: _Placement, new_etg: ExecutionGraph, backlog: np.ndarray

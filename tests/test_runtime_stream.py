@@ -335,6 +335,9 @@ def test_controller_migration_pause_applies(cluster):
 # Pre-PR executor fingerprints of shuffle-grouping golden runs: the keyed
 # arrival path must leave even-split runs bit-identical (ISSUE 5
 # acceptance). Recorded from commit 12cf43e (before fields grouping).
+# ISSUE 6's bincount vectorization of the executor's per-window np.add.at
+# accumulations also rides on these four pins: np.bincount must accumulate
+# bit-identically (sequential input order) or these digests move.
 _SHUFFLE_GOLDEN_FPS = {
     ("linear", "burst"): "26fc286367d2ab03eba1c45d9417a04b",
     ("linear", "ramp"): "ca9542d22a245bc90ba588543f47f041",
