@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   dispatch closed-form scorer backend crossover (writes BENCH_dispatch.json)
   runtime online streaming runtime: static vs online controller vs oracle
          on drift scenarios (writes BENCH_runtime.json)
+  multitenant 100-tenant fairness scale, tenant-batched scoring, shared
+         runtime (writes BENCH_multitenant.json)
   planner beyond-paper heterogeneous LM fleet planning
   roofline dry-run roofline aggregation (requires dry-run artifacts)
 """
@@ -22,6 +24,7 @@ from benchmarks import (
     bench_dispatch,
     bench_instances,
     bench_largescale,
+    bench_multitenant,
     bench_planner,
     bench_prediction,
     bench_refine,
@@ -44,6 +47,7 @@ def main() -> None:
     bench_refine.main(json_path="BENCH_refine.json")
     bench_dispatch.main(json_path="BENCH_dispatch.json")
     bench_runtime.main(json_path="BENCH_runtime.json")
+    bench_multitenant.main(json_path="BENCH_multitenant.json")
     bench_planner.main()
     bench_roofline.main()
 

@@ -34,7 +34,9 @@ from repro.core.graph import (
 )
 from repro.core.maximize_throughput import Schedule, maximize_throughput, schedule
 from repro.core.metrics import (
+    fairness_levels,
     gain_ratio,
+    jain_index,
     per_machine_utilization,
     prediction_accuracy,
     weighted_utilization,
@@ -67,7 +69,9 @@ __all__ = [
     "ScheduleState",
     "maximize_throughput",
     "schedule",
+    "fairness_levels",
     "gain_ratio",
+    "jain_index",
     "per_machine_utilization",
     "prediction_accuracy",
     "weighted_utilization",

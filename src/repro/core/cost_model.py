@@ -435,9 +435,14 @@ def closed_form_rates(
     (B, T) when rows carry their own (``per_row_task_maps``). NumPy's
     pairwise row sum makes the per-row throughput reduction bit-identical
     to the shared one.
+
+    ``capacity`` is (m,) when every row scores against one capacity vector,
+    or (B, m) when rows carry their own — the multi-tenant batch scorer
+    prices each tenant's candidates against that tenant's residual
+    capacity this way.
     """
     B, T = task_machine.shape
-    m = capacity.shape[0]
+    m = capacity.shape[-1]
     rows = np.repeat(np.arange(B), T)
     cols = task_machine.reshape(-1)
     unit_ir_bt = unit_ir if unit_ir.ndim == 2 else unit_ir[None, :]
@@ -446,7 +451,8 @@ def closed_form_rates(
     np.add.at(var_w, (rows, cols), (e * unit_ir_bt).reshape(-1))
     np.add.at(met_w, (rows, cols), met.reshape(-1))
 
-    head = capacity[None, :] - met_w                   # (B, m)
+    cap_b = capacity if capacity.ndim == 2 else capacity[None, :]
+    head = cap_b - met_w                               # (B, m)
     infeasible = np.any(head < 0.0, axis=1)
     # over="ignore": a zero-var machine with capacity-scale head can hit
     # head/1e-300 -> inf; np.where discards it, so silence the warning.

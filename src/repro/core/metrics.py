@@ -16,6 +16,8 @@ __all__ = [
     "weighted_utilization",
     "prediction_accuracy",
     "gain_ratio",
+    "fairness_levels",
+    "jain_index",
 ]
 
 
@@ -90,3 +92,33 @@ def gain_ratio(
     if diff_util == 0.0:
         return float("inf") if diff_thpt > 0 else 1.0
     return float(diff_thpt / diff_util)
+
+
+def fairness_levels(
+    rates: np.ndarray, targets: np.ndarray, priorities: np.ndarray | None = None
+) -> np.ndarray:
+    """(N,) weighted fairness level per tenant: ``(R/R_target) / priority``.
+
+    The quantity the multi-tenant water-filling loop leximin-maximizes
+    (Ghaderi et al.'s weighted max-min objective on satisfaction ratios);
+    equal levels mean every tenant gets capacity proportional to
+    ``priority * target``.
+    """
+    rates = np.asarray(rates, dtype=np.float64)
+    targets = np.asarray(targets, dtype=np.float64)
+    if priorities is None:
+        priorities = np.ones_like(targets)
+    return rates / (targets * np.asarray(priorities, dtype=np.float64))
+
+
+def jain_index(values: np.ndarray) -> float:
+    """Jain's fairness index of a nonnegative allocation vector:
+    ``(sum x)^2 / (N * sum x^2)`` — 1.0 when perfectly even, 1/N when one
+    tenant holds everything. Reported by the multi-tenant benchmark over
+    the per-tenant fairness levels.
+    """
+    x = np.asarray(values, dtype=np.float64)
+    denom = x.size * float((x * x).sum())
+    if denom == 0.0:
+        return 1.0
+    return float(x.sum()) ** 2 / denom

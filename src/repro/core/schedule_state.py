@@ -25,12 +25,14 @@ docs/architecture.md for the full derivation):
    raise loop jumps through its geometric schedule comparing against R*
    (O(1) per step after one O(m) reduction per structural change) instead
    of re-predicting all T tasks per step. Iterations within a relative
-   guard band of R* fall back to the per-machine utilization check
-   (same eq. 6 propagation as the reference; the per-machine sum is
-   grouped per component rather than per task, a last-ulp association
-   difference — the golden equivalence suite is the gate that boundary
-   decisions agree in practice). Trace semantics (one trace entry per
-   Algorithm-2 iteration) are preserved.
+   float-uncertainty band of R* are decided by *exact rational
+   arithmetic* on the cached linear coefficients (``fractions.Fraction``
+   over the per-machine ``met_load``/``var_load`` floats), so the
+   feasibility boundary is a hard number — no heuristic re-check band
+   (the golden equivalence suite remains the gate that boundary
+   decisions agree with the reference's per-task summation in practice).
+   Trace semantics (one trace entry per Algorithm-2 iteration) are
+   preserved.
 
 3. **Closed-form growth feasibility.** Inside ``_grow_component`` the new
    chunk TCU is a fixed per-machine value, so greedy placement of k new
@@ -49,6 +51,8 @@ default); ``engine="reference"`` runs the original path. Golden tests in
 
 from __future__ import annotations
 
+from fractions import Fraction
+
 import numpy as np
 
 from repro.core import cost_model
@@ -57,10 +61,11 @@ from repro.core.profiles import Cluster
 
 __all__ = ["ScheduleState", "maximize_throughput_incremental"]
 
-# Relative half-width of the band around the closed-form R* inside which the
-# raise loop re-checks feasibility with the exact per-machine utilization
-# (guards against last-ulp disagreement between the closed form and the
-# reference's per-task summation order).
+# Relative half-width of the float pre-filter around the closed-form R*.
+# Rates outside the band are decided by the float comparison alone (the
+# float R* is within a few ulps of the exact rational value, far inside
+# 1e-9 relative); rates inside the band are decided exactly, in rational
+# arithmetic over the cached linear coefficients (`feasible_linear_exact`).
 _RSTAR_GUARD = 1e-9
 
 
@@ -203,6 +208,56 @@ class ScheduleState:
         with np.errstate(divide="ignore"):
             limits = np.where(var > 0.0, head / np.maximum(var, 1e-300), np.inf)
         return float(max(np.min(limits), 0.0))
+
+    def max_stable_rate_exact(self) -> "Fraction | None":
+        """Exact rational R* of the linear load model (``None`` = unbounded).
+
+        Treats the cached float coefficients as exact rationals, so
+        ``rate`` is stable iff ``Fraction(rate) <= max_stable_rate_exact()``
+        — the feasibility boundary is a hard number, with no float-rounding
+        band around it. A negative result means the rate-independent load
+        alone already exceeds some machine's capacity.
+        """
+        best: Fraction | None = None
+        for cap_w, met_w, var_w in zip(
+            self.cluster.capacity.tolist(),
+            self.met_load.tolist(),
+            self.var_load.tolist(),
+        ):
+            head = Fraction(cap_w) - Fraction(met_w)
+            if var_w > 0.0:
+                lim = head / Fraction(var_w)
+            elif head < 0:
+                return Fraction(-1)
+            else:
+                continue
+            if best is None or lim < best:
+                best = lim
+        return best
+
+    def feasible_linear_exact(self, rate: float) -> bool:
+        """Exact feasibility of the linear model at ``rate``.
+
+        Evaluates ``met_load_w + rate * var_load_w <= cap_w`` per machine in
+        rational arithmetic over the cached float coefficients — the
+        arbiter for rates inside the float pre-filter band around R*.
+        """
+        return self.first_over_machine_exact(rate) is None
+
+    def first_over_machine_exact(self, rate: float) -> "int | None":
+        """First machine (reference index order) over capacity at ``rate``
+        under the exact linear model, or ``None`` if every machine fits."""
+        r = Fraction(rate)
+        for w, (cap_w, met_w, var_w) in enumerate(
+            zip(
+                self.cluster.capacity.tolist(),
+                self.met_load.tolist(),
+                self.var_load.tolist(),
+            )
+        ):
+            if Fraction(met_w) + r * Fraction(var_w) > Fraction(cap_w):
+                return w
+        return None
 
     # --------------------------------------------------------- mutation
 
@@ -537,14 +592,17 @@ def maximize_throughput_incremental(
         it += 1
         if rstar is None:
             rstar = state.max_stable_rate()
-        # Closed-form feasibility: strictly inside R* needs no per-machine
-        # work at all; at or beyond the guarded boundary fall back to the
-        # exact utilization (also needed to pick the over-utilized machine).
-        over = np.zeros(0, dtype=np.int64)
-        if current_rate > rstar * (1.0 - _RSTAR_GUARD):
-            util = state.utilization(current_rate)
-            over = np.flatnonzero(cluster.capacity - util < 0.0)
-        if over.size == 0:
+        # Closed-form feasibility: far from R* the float comparison alone
+        # decides (float R* is within ulps of the exact rational value);
+        # inside the pre-filter band, exact rational arithmetic over the
+        # linear coefficients is the arbiter — no heuristic re-check.
+        if current_rate <= rstar * (1.0 - _RSTAR_GUARD):
+            feasible = True
+        elif current_rate >= rstar * (1.0 + _RSTAR_GUARD):
+            feasible = False
+        else:
+            feasible = state.feasible_linear_exact(current_rate)
+        if feasible:
             final_snap = state.snapshot()
             final_rate = current_rate
             increment = current_rate / scale
@@ -554,8 +612,17 @@ def maximize_throughput_incremental(
             current_rate += increment
             trace.append((it, "raise_rate", current_rate))
             continue
-        # Over-utilization: hottest task on the first over-utilized machine.
-        component = _hottest_component(state, int(over[0]), current_rate)
+        # Over-utilization: hottest task on the first over-utilized machine
+        # (reference index order) under the same linear model; the exact
+        # rational scan runs only when float rounding hides the machine.
+        head = cluster.capacity - (state.met_load + current_rate * state.var_load)
+        over_idx = np.flatnonzero(head < 0.0)
+        if over_idx.size:
+            over_w = int(over_idx[0])
+        else:
+            exact_w = state.first_over_machine_exact(current_rate)
+            over_w = int(np.argmin(head)) if exact_w is None else exact_w
+        component = _hottest_component(state, over_w, current_rate)
         added = _grow_component_fast(state, component, current_rate)
         if added:
             rstar = None

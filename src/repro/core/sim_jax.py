@@ -223,7 +223,10 @@ def _msr_kernel(per_row: bool = False):
     ``unit_ir`` maps (every row one instance-count vector — no point
     shipping B identical copies to the device); ``per_row=True`` takes
     (B, T) maps so rows may carry different count vectors (lockstep growth
-    batches) or per-row skew-realized unit rates.
+    batches) or per-row skew-realized unit rates. ``capacity`` may be (m,)
+    shared or (B, m) per-row (the multi-tenant batch scorer prices each
+    row against its tenant's residual capacity); the rank difference is a
+    trace-time constant, so both shapes share one cached variant.
     """
     import jax
     import jax.numpy as jnp
@@ -231,7 +234,7 @@ def _msr_kernel(per_row: bool = False):
     @jax.jit
     def kernel(task_machine, comp, unit_ir, e_cm, met_cm, capacity):
         B, T = task_machine.shape
-        m = capacity.shape[0]
+        m = capacity.shape[-1]
         cmap = comp if per_row else comp[None, :]
         e = e_cm[cmap, task_machine]                 # (B, T)
         met = met_cm[cmap, task_machine]
@@ -244,7 +247,8 @@ def _msr_kernel(per_row: bool = False):
         )
         var_w = jnp.sum(jnp.where(onehot, ev[:, None, :], 0.0), axis=-1)
         met_w = jnp.sum(jnp.where(onehot, met[:, None, :], 0.0), axis=-1)
-        head = capacity[None, :] - met_w
+        cap_b = capacity if capacity.ndim == 2 else capacity[None, :]
+        head = cap_b - met_w
         infeasible = jnp.any(head < 0.0, axis=1)
         limits = jnp.where(var_w > 0.0, head / jnp.maximum(var_w, 1e-300), jnp.inf)
         rates = jnp.clip(jnp.min(limits, axis=1), 0.0, None)
@@ -285,15 +289,18 @@ def closed_form_rates_jax(
     """JAX twin of ``cost_model.closed_form_rates`` (scatter-free).
 
     ``comp`` / ``unit_ir`` may be (T,) shared maps or (B, T) per-row maps;
-    each shape routes to its own cached kernel variant. On TPU backends (or
-    under ``REPRO_SCHED_SCORING_PALLAS``) the accumulation runs the Pallas
-    segmented-reduce kernel instead of the XLA contraction.
+    each shape routes to its own cached kernel variant. ``capacity`` may be
+    (m,) shared or (B, m) per-row. On TPU backends (or under
+    ``REPRO_SCHED_SCORING_PALLAS``) the accumulation runs the Pallas
+    segmented-reduce kernel instead of the XLA contraction — except for
+    per-row capacity, which the Pallas kernel does not carry yet; those
+    batches stay on the XLA contraction on every backend.
     """
     import os
 
     from jax.experimental import enable_x64
 
-    if _use_pallas_scoring():
+    if _use_pallas_scoring() and capacity.ndim == 1:
         from repro.kernels.sched_scoring.ops import closed_form_rates_sched
 
         interpret = os.environ.get("REPRO_SCHED_SCORING_PALLAS") == "interpret"

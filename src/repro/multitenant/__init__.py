@@ -1,0 +1,45 @@
+"""Multi-tenant scheduling on one shared heterogeneous cluster.
+
+N user topologies, each with a contracted target rate and priority, share
+the machines. Per-tenant ``ScheduleState``s share one machine-load vector
+(exact cross-tenant interference pricing via the linear load model), a
+water-filling loop allocates weighted max-min fair rates, and candidate
+sweeps of *different* tenants batch into single closed-form kernel calls
+(tenants become rows). See ``docs/architecture.md`` (multi-tenant
+section) for the derivation and guarantees.
+"""
+
+from repro.multitenant.batch import TenantBatchScorer
+from repro.multitenant.fairness import (
+    MultiTenantSchedule,
+    TenantAllocation,
+    fair_shares,
+    fair_slice_floors,
+    schedule_tenants,
+)
+from repro.multitenant.runtime import (
+    MultiTenantRuntime,
+    MultiTenantRuntimeResult,
+    MultiTenantTrace,
+    ReplanArbiter,
+    compile_tenant_traces,
+)
+from repro.multitenant.state import MultiTenantState
+from repro.multitenant.tenants import Tenant, TenantSet
+
+__all__ = [
+    "Tenant",
+    "TenantSet",
+    "MultiTenantState",
+    "TenantBatchScorer",
+    "TenantAllocation",
+    "MultiTenantSchedule",
+    "fair_shares",
+    "fair_slice_floors",
+    "schedule_tenants",
+    "MultiTenantTrace",
+    "compile_tenant_traces",
+    "ReplanArbiter",
+    "MultiTenantRuntime",
+    "MultiTenantRuntimeResult",
+]

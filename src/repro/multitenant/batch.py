@@ -1,0 +1,243 @@
+"""Tenant-batched closed-form scoring: tenants become rows.
+
+The single-tenant engines score B candidate placements of *one* topology
+per kernel call. Multi-tenant search wants to score candidates belonging
+to *different* tenants — each against its own residual capacity — in one
+``(B, T, m)`` closed-form evaluation, reusing the per-row task-map support
+(``cost_model.per_row_task_maps`` / the ``per_row`` ``_msr_kernel``
+variant) that already lets rows differ structurally.
+
+Two ingredients make different tenants batch into one call:
+
+* a **met fold** — tenant s's committed load is linear in its allocated
+  rate R_s, so each of its tasks contributes the fixed quantity
+  ``met_cm[c, w] + e_cm[c, w] * unit_ir_task * R_s`` to its machine
+  (skew-aware: the per-task unit IR comes from
+  ``SkewModel.per_task_unit_ir`` when the tenant has a key-share model).
+  Folding those per-task loads onto their incumbent machines (one
+  canonical-order ``bincount``) prices the whole fleet as one fixed
+  (m,) frozen-load vector F, and tenant t's residual capacity is
+  ``cluster.capacity - (F - F_t_own)``.
+
+* **per-row capacity** — ``closed_form_rates`` and the jitted
+  ``_msr_kernel`` accept a (B, m) capacity matrix, so each candidate row
+  scores against *its* tenant's residual. Rows stay compact: width is
+  max tenant task count (co-tenants live in the capacity row, not in
+  frozen columns), padded with a zero profile row for shorter tenants.
+
+The closed form then returns exactly tenant t's residual R* and
+throughput per row. Rows dispatch through the same ``backend="auto"``
+crossover policy as the single-tenant path.
+
+Floats differ from the explicit residual-capacity subtraction only in
+summation association (~1e-15 relative); ``tests/test_multitenant_golden``
+pins parity at 1e-12 with identical argmax.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import cost_model
+from repro.core.schedule_state import ScheduleState
+
+from repro.multitenant.state import MultiTenantState
+
+__all__ = ["TenantBatchScorer"]
+
+
+class TenantBatchScorer:
+    """Score count-preserving candidate rows for many tenants in one call.
+
+    Snapshots the multi-tenant state's committed rates at construction
+    (the met fold bakes them into the frozen-load vector) — rebuild the
+    scorer after rates or placements change. Candidate rows must keep
+    each tenant's instance counts (RELOCATE/SWAP-style sweeps); growth
+    moves go through the per-tenant refine path on residual clusters.
+    """
+
+    def __init__(self, mt: MultiTenantState, backend: str = "auto"):
+        self.mt = mt
+        self.backend = backend
+        self.candidates_evaluated = 0
+
+        states = mt.states
+        self._has_skew = any(st.skew is not None for st in states)
+
+        # Blocks concatenate in canonical (name) order — NOT submission
+        # order — so the frozen-load bincount sums every tenant's tasks in
+        # one canonical sequence and scores are bit-identical under
+        # submission-order permutations. Per-tenant spans map a tenant
+        # *index* to its rows/columns.
+        order = mt.tenant_set.canonical_order()
+        self._comp_span: dict[int, tuple[int, int]] = {}
+        self._task_span: dict[int, tuple[int, int]] = {}
+        n_all = 0
+        t_all = 0
+        for t in order:
+            st = states[t]
+            self._comp_span[t] = (n_all, n_all + st.utg.n_components)
+            self._task_span[t] = (t_all, t_all + int(st.n_instances.sum()))
+            n_all += st.utg.n_components
+            t_all += int(st.n_instances.sum())
+        self.n_tasks = t_all
+        self.t_max = max(hi - lo for lo, hi in self._task_span.values())
+
+        m = mt.cluster.n_machines
+        e_act = np.concatenate([states[t].e_cm for t in order], axis=0)
+        met_act = np.concatenate([states[t].met_cm for t in order], axis=0)
+        # One zero profile row pads short tenants' columns: a padding task
+        # parks on machine 0 with e = met = unit = 0 and contributes
+        # nothing to either accumulator.
+        self.pad_comp = n_all
+        self.e_table = np.concatenate([e_act, np.zeros((1, m))], axis=0)
+        self.met_table = np.concatenate([met_act, np.zeros((1, m))], axis=0)
+
+        # Concatenated incumbent row, per-task active maps, and the met
+        # fold: each task's committed load on its incumbent machine.
+        base_row = np.concatenate([states[t].task_machine() for t in order])
+        active_comp = np.empty(t_all, dtype=np.int64)
+        active_unit = np.empty(t_all, dtype=np.float64)
+        task_load = np.empty(t_all, dtype=np.float64)
+        for t in order:
+            st = states[t]
+            lo, hi = self._task_span[t]
+            comp_t = np.repeat(np.arange(st.utg.n_components), st.n_instances)
+            if st.skew is not None:
+                unit_t = st.skew.per_task_unit_ir(st.n_instances)
+            else:
+                unit_t = (st.cir_unit / st.n_instances)[comp_t]
+            active_comp[lo:hi] = self._comp_span[t][0] + comp_t
+            active_unit[lo:hi] = unit_t
+            rate_t = float(mt.rates[t])
+            w = base_row[lo:hi]
+            task_load[lo:hi] = (
+                st.met_cm[comp_t, w] + st.e_cm[comp_t, w] * unit_t * rate_t
+            )
+
+        self.base_row = base_row
+        self.active_comp = active_comp
+        self.active_unit = active_unit
+        # Fleet frozen load F (canonical-order bincount), then per-tenant
+        # residual capacity: cluster capacity minus everyone *else*.
+        frozen = np.bincount(base_row, weights=task_load, minlength=m)
+        self._resid_cap = np.empty((len(states), m), dtype=np.float64)
+        for t in order:
+            lo, hi = self._task_span[t]
+            own = np.bincount(
+                base_row[lo:hi], weights=task_load[lo:hi], minlength=m
+            )
+            self._resid_cap[t] = mt.cluster.capacity - (frozen - own)
+
+    # ----------------------------------------------------------- scoring
+
+    def score(
+        self, sweeps: "list[tuple[int, np.ndarray]]"
+    ) -> "list[tuple[np.ndarray, np.ndarray]]":
+        """Score candidate sweeps for several tenants in one kernel call.
+
+        Args:
+          sweeps: list of ``(tenant_index, rows)`` where ``rows`` is a
+            (B_t, T_t) array of candidate placements for that tenant's
+            column block (T_t = tenant's task count). B_t = 0 sweeps are
+            allowed and return empty scores.
+
+        Returns:
+          One ``(rates, throughputs)`` pair per sweep, in order — each
+          tenant's residual closed-form scores for its rows.
+        """
+        sizes = []
+        for t, rows in sweeps:
+            rows = np.asarray(rows, dtype=np.int64)
+            lo, hi = self._task_span[t]
+            if rows.ndim != 2 or rows.shape[1] != hi - lo:
+                raise ValueError(
+                    f"tenant {t} sweep must be (B, {hi - lo}), got {rows.shape}"
+                )
+            sizes.append(rows.shape[0])
+        b_total = int(sum(sizes))
+        if b_total == 0:
+            empty = np.zeros(0, dtype=np.float64)
+            return [(empty.copy(), empty.copy()) for _ in sweeps]
+
+        m = self.mt.cluster.n_machines
+        tm = np.zeros((b_total, self.t_max), dtype=np.int64)
+        comp = np.full((b_total, self.t_max), self.pad_comp, dtype=np.int64)
+        unit = np.zeros((b_total, self.t_max), dtype=np.float64)
+        cap = np.empty((b_total, m), dtype=np.float64)
+        row0 = 0
+        for (t, rows), b_t in zip(sweeps, sizes):
+            if b_t == 0:
+                continue
+            lo, hi = self._task_span[t]
+            w = hi - lo
+            sl = slice(row0, row0 + b_t)
+            tm[sl, :w] = np.asarray(rows, dtype=np.int64)
+            comp[sl, :w] = self.active_comp[lo:hi]
+            unit[sl, :w] = self.active_unit[lo:hi]
+            cap[sl] = self._resid_cap[t]
+            row0 += b_t
+
+        rates, thpt = self._dispatch(tm, comp, unit, cap)
+        self.candidates_evaluated += b_total
+        out: list[tuple[np.ndarray, np.ndarray]] = []
+        row0 = 0
+        for b_t in sizes:
+            out.append((rates[row0 : row0 + b_t], thpt[row0 : row0 + b_t]))
+            row0 += b_t
+        return out
+
+    def residual_rates(self) -> np.ndarray:
+        """(N,) residual closed-form R* of every tenant's incumbent row —
+        all tenants scored as rows of one batched call."""
+        sweeps = []
+        for t in range(len(self.mt.states)):
+            lo, hi = self._task_span[t]
+            sweeps.append((t, self.base_row[lo:hi][None, :]))
+        scored = self.score(sweeps)
+        return np.array([float(r[0]) for r, _ in scored], dtype=np.float64)
+
+    def _dispatch(
+        self,
+        tm: np.ndarray,
+        comp: np.ndarray,
+        unit: np.ndarray,
+        capacity: np.ndarray,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        from repro.core.simulator import resolve_closed_form_backend
+
+        resolved = resolve_closed_form_backend(
+            self.backend,
+            tm.size,
+            regime="skew" if self._has_skew else "per_row",
+            n_machines=capacity.shape[-1],
+        )
+        if resolved == "jax":
+            from repro.core.sim_jax import closed_form_rates_jax
+
+            return closed_form_rates_jax(
+                tm, comp, unit, self.e_table, self.met_table, capacity
+            )
+        e = self.e_table[comp, tm]
+        met = self.met_table[comp, tm]
+        return cost_model.closed_form_rates(tm, e, met, unit, capacity)
+
+    # ------------------------------------------------- reference (tests)
+
+    def reference_scores(
+        self, tenant: int, rows: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-tenant NumPy reference: explicit residual-capacity scoring.
+
+        Builds a fresh single-tenant state on ``residual_cluster(tenant)``
+        and scores ``rows`` through the stock NumPy path — the loop the
+        parity tests compare the batched scoring against.
+        """
+        mt = self.mt
+        st = mt.states[tenant]
+        solo = ScheduleState.from_etg(
+            st.to_etg(), mt.residual_cluster(tenant), skew=st.skew
+        )
+        return solo.score_task_machine_batch(
+            np.asarray(rows, dtype=np.int64), backend="numpy"
+        )

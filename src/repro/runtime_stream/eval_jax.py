@@ -101,6 +101,7 @@ def evaluate_policies_batch(
     policies: np.ndarray,
     config: RuntimeConfig | None = None,
     backend: str = "auto",
+    external_load: np.ndarray | None = None,
 ) -> PolicyEvalResult:
     """Run every trace against every static placement in one sweep.
 
@@ -116,10 +117,29 @@ def evaluate_policies_batch(
       backend: ``"numpy"`` (reference: the Python executor per pair),
         ``"jax"`` (one jitted ``lax.scan``, ~1e-9 agreement), or
         ``"auto"`` (JAX when importable, NumPy otherwise).
+      external_load: optional (W, m) or (m,) load held by co-tenants of
+        the shared machines, subtracted (clipped at zero) from every
+        trace's capacity grid before evaluation — the tenant dimension of
+        the batch evaluator, matching ``StreamExecutor(background_load=)``.
     """
     if backend not in ("auto", "numpy", "jax"):
         raise ValueError(f"unknown backend {backend!r}")
     config = config or RuntimeConfig()
+    if external_load is not None and traces:
+        import dataclasses as _dc
+
+        bg = np.asarray(external_load, dtype=np.float64)
+        shape = traces[0].capacity.shape
+        if bg.ndim == 1:
+            bg = np.broadcast_to(bg, shape)
+        if bg.shape != shape:
+            raise ValueError(
+                f"external_load must be (m,) or match the (W, m) capacity grid {shape}"
+            )
+        traces = [
+            _dc.replace(tr, capacity=np.clip(tr.capacity - bg, 0.0, None))
+            for tr in traces
+        ]
     policies = _validate(etg, cluster, traces, policies)
     if backend == "auto":
         backend = "jax" if _jax_available() else "numpy"

@@ -171,6 +171,11 @@ class StreamExecutor:
         compiled ``CompiledTrace`` (its own seed wins).
       seed: compilation seed for stochastic trace events.
       config: event-loop constants (see ``RuntimeConfig``).
+      background_load: optional (W, m) or (m,) load other occupants of the
+        shared machines consume — subtracted (clipped at zero) from the
+        trace's capacity grid each window, so both the service step and
+        every controller observation see only the residual head room.
+        This is how the multi-tenant runtime prices co-tenants.
     """
 
     def __init__(
@@ -180,6 +185,7 @@ class StreamExecutor:
         trace: TraceSpec | CompiledTrace,
         seed: int = 0,
         config: RuntimeConfig | None = None,
+        background_load: np.ndarray | None = None,
     ):
         self.cluster = cluster
         self.config = config or RuntimeConfig()
@@ -190,6 +196,19 @@ class StreamExecutor:
         )
         if self.trace.capacity.shape[1] != cluster.n_machines:
             raise ValueError("trace capacity grid does not match the cluster")
+        if background_load is not None:
+            bg = np.asarray(background_load, dtype=np.float64)
+            if bg.ndim == 1:
+                bg = np.broadcast_to(bg, self.trace.capacity.shape)
+            if bg.shape != self.trace.capacity.shape:
+                raise ValueError(
+                    "background_load must be (m,) or match the trace's "
+                    f"(W, m) capacity grid {self.trace.capacity.shape}"
+                )
+            self.trace = dataclasses.replace(
+                self.trace,
+                capacity=np.clip(self.trace.capacity - bg, 0.0, None),
+            )
         keyed_edges = {kt.edge for kt in self.trace.keyed}
         want_edges = {g.edge for g in etg.utg.groupings}
         if keyed_edges != want_edges:

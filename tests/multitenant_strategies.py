@@ -1,0 +1,64 @@
+"""Shared hypothesis strategies for the multi-tenant property suite.
+
+Imported by ``test_multitenant_properties.py`` behind
+``pytest.importorskip("hypothesis")`` (the dev image may not ship
+hypothesis; CI installs it), so this module may import it at the top
+level. Reuses the single-tenant DAG/cluster strategies from
+``sched_strategies`` and wraps them into tenant fleets.
+"""
+
+import numpy as np
+from hypothesis import strategies as st
+
+from repro.core import paper_cluster
+from repro.multitenant import Tenant, TenantSet
+
+from sched_strategies import PROFILE, random_dag, random_keyed_dag
+
+
+@st.composite
+def random_tenant(draw, index: int, allow_skew: bool = True):
+    """One tenant: a random (possibly keyed) DAG with a drawn contract.
+
+    Priorities are drawn from a skewed palette (most tenants at 1, a few
+    at 2x/4x) so weighted fairness actually differentiates; target rates
+    span an order of magnitude so levels are not trivially comparable.
+    """
+    if allow_skew and draw(st.booleans()) and draw(st.booleans()):
+        utg = draw(random_keyed_dag(max_components=5, max_keys=24))
+    else:
+        utg = draw(random_dag(max_components=5))
+    return Tenant(
+        name=f"t{index:03d}",
+        utg=utg,
+        target_rate=draw(st.floats(2.0, 40.0)),
+        priority=draw(st.sampled_from([1.0, 1.0, 1.0, 2.0, 4.0])),
+    )
+
+
+@st.composite
+def random_tenant_fleet(draw, min_tenants: int = 1, max_tenants: int = 6):
+    """A fleet of 1..N tenants with unique names in drawn order."""
+    n = draw(st.integers(min_tenants, max_tenants))
+    tenants = [draw(random_tenant(i)) for i in range(n)]
+    # Shuffle submission order — canonical (name) order must not depend
+    # on it, which is exactly what the permutation property checks.
+    perm = draw(st.permutations(list(range(n))))
+    return TenantSet([tenants[i] for i in perm])
+
+
+@st.composite
+def roomy_cluster(draw, max_per_type: int = 2, floor: float = 150.0):
+    """A shared cluster with enough per-machine capacity that every
+    tenant's fair slice can host at least a minimal placement (MET is
+    lumpy: below ~``N * met`` points per machine the fair-slice warm
+    start legitimately defers tenants to rate 0, which is covered by the
+    dedicated thin-slice test rather than drawn at random here)."""
+    counts = tuple(draw(st.integers(0, max_per_type)) for _ in range(3))
+    if sum(counts) == 0:
+        counts = (1, 1, 1)
+    cluster = paper_cluster(counts, PROFILE)
+    scale = draw(st.floats(1.5, 4.0))
+    return cluster.with_capacity(
+        np.maximum(cluster.capacity * scale, floor)
+    )

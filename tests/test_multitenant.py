@@ -1,0 +1,206 @@
+"""Deterministic multi-tenant scheduling tests (no hypothesis required).
+
+The hypothesis suite in ``test_multitenant_properties.py`` explores the
+same invariants over random fleets; this file pins them on fixed
+scenarios so the fast local tier (and coverage) exercises the package
+even when hypothesis is not installed.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ScheduleState,
+    diamond_topology,
+    fairness_levels,
+    jain_index,
+    linear_topology,
+    paper_cluster,
+    refine,
+    rolling_count_topology,
+    schedule,
+    star_topology,
+)
+from repro.multitenant import (
+    MultiTenantRuntime,
+    MultiTenantState,
+    Tenant,
+    TenantSet,
+    compile_tenant_traces,
+    fair_shares,
+    schedule_tenants,
+)
+from repro.runtime_stream import TraceSpec
+
+
+def _three_tenants():
+    return [
+        Tenant(name="alice", utg=linear_topology(), target_rate=10.0, priority=2.0),
+        Tenant(name="bob", utg=diamond_topology(), target_rate=30.0, priority=1.0),
+        Tenant(name="carol", utg=star_topology(), target_rate=10.0, priority=1.0),
+    ]
+
+
+def _fair_slice_rate(tenant, cluster, share):
+    sliced = cluster.with_capacity(cluster.capacity * share)
+    sched = schedule(tenant.utg, sliced, r0=1.0, rate_epsilon=0.5)
+    ref = refine(sched.etg, sliced, skew=tenant.skew)
+    st = ScheduleState.from_etg(ref.etg, cluster, skew=tenant.skew)
+    if np.all(st.met_load + ref.rate * st.var_load <= sliced.capacity + 1e-9):
+        return ref.rate
+    return 0.0
+
+
+def test_solo_bit_identical_to_single_tenant_pipeline():
+    """N == 1 is the stock schedule() + refine() pipeline, bit-for-bit."""
+    cluster = paper_cluster((2, 2, 2))
+    utg = rolling_count_topology()
+    ms = schedule_tenants(
+        [Tenant(name="only", utg=utg, target_rate=5.0)], cluster
+    )
+    sched = schedule(utg, cluster, r0=1.0, rate_epsilon=0.5)
+    ref = refine(sched.etg, cluster)
+    alloc = ms.allocations[0]
+    assert alloc.rate == ref.rate
+    assert alloc.etg.task_machine().tolist() == ref.etg.task_machine().tolist()
+    assert ms.rounds == 0 and ms.candidates_evaluated == 0
+
+
+def test_three_tenants_feasible_and_no_regression():
+    """Shared-load invariant holds and every tenant gets at least its
+    fair-slice solo rate (the warm-start guarantee)."""
+    tenants = _three_tenants()
+    cluster = paper_cluster((2, 2, 2))
+    ms = schedule_tenants(tenants, cluster, validate=True)
+    shares = fair_shares(tenants)
+
+    states = [
+        ScheduleState.from_etg(a.etg, cluster, skew=t.skew)
+        for a, t in zip(ms.allocations, tenants)
+    ]
+    mt = MultiTenantState(TenantSet(tenants), cluster, states, rates=ms.rates)
+    assert mt.feasible(slack=1e-9)
+
+    for tenant, share, alloc in zip(tenants, shares, ms.allocations):
+        baseline = _fair_slice_rate(tenant, cluster, share)
+        assert alloc.rate >= baseline * (1.0 - 1e-6), tenant.name
+
+
+def test_determinism_and_submission_order_invariance():
+    """Two runs agree bit-for-bit; reversing submission order permutes the
+    report but changes no rate and no placement."""
+    tenants = _three_tenants()
+    cluster = paper_cluster((2, 1, 1))
+    a = schedule_tenants(tenants, cluster)
+    b = schedule_tenants(tenants, cluster)
+    c = schedule_tenants(list(reversed(tenants)), cluster)
+    for t in tenants:
+        x, y, z = a.allocation(t.name), b.allocation(t.name), c.allocation(t.name)
+        assert x.rate == y.rate == z.rate
+        assert (
+            x.etg.task_machine().tolist()
+            == y.etg.task_machine().tolist()
+            == z.etg.task_machine().tolist()
+        )
+
+
+def test_thin_slice_tenants_defer_and_still_get_served():
+    """A dominant priority squeezes co-tenants' fair slices below one
+    instance's MET: they defer to rate-0 warm starts, the ensemble stays
+    feasible, and the water loop still raises them off zero when the big
+    tenant leaves head room."""
+    tenants = [
+        Tenant(name="whale", utg=diamond_topology(), target_rate=50.0, priority=500.0)
+    ] + [
+        Tenant(name=f"shrimp{i}", utg=linear_topology(), target_rate=5.0)
+        for i in range(4)
+    ]
+    cluster = paper_cluster((2, 2, 2))
+    shares = fair_shares(tenants)
+    assert shares[0] > 0.99  # shrimp slices are genuinely sub-MET thin
+    ms = schedule_tenants(tenants, cluster, validate=True)
+    assert all(a.rate >= 0.0 for a in ms.allocations)
+    assert ms.allocation("whale").rate > 0.0
+    # The whale cannot saturate 6 machines alone; shrimps pick up slack.
+    assert sum(ms.allocation(f"shrimp{i}").rate for i in range(4)) > 0.0
+
+
+def test_met_oversubscribed_fleet_raises():
+    """A fleet whose fixed MET alone cannot fit the cluster is rejected
+    with a clear error, not a silently infeasible allocation."""
+    tenants = [
+        Tenant(name=f"t{i:02d}", utg=star_topology(), target_rate=5.0)
+        for i in range(40)
+    ]
+    cluster = paper_cluster((1, 1, 1))
+    tiny = cluster.with_capacity(np.full(cluster.n_machines, 6.0))
+    with pytest.raises(ValueError, match="MET load alone"):
+        schedule_tenants(tenants, tiny)
+
+
+def test_fairness_metrics():
+    rates = np.array([4.0, 4.0, 1.0])
+    targets = np.array([8.0, 8.0, 8.0])
+    lv = fairness_levels(rates, targets)
+    np.testing.assert_allclose(lv, [0.5, 0.5, 0.125])
+    lv_w = fairness_levels(rates, targets, priorities=np.array([4.0, 4.0, 1.0]))
+    np.testing.assert_allclose(lv_w, [0.125, 0.125, 0.125])
+    assert jain_index(np.ones(5)) == pytest.approx(1.0)
+    assert jain_index(np.array([1.0, 0.0, 0.0])) == pytest.approx(1.0 / 3.0)
+    assert jain_index(np.zeros(3)) == 1.0
+
+
+def test_runtime_shared_capacity_and_arbiter():
+    """Two tenants execute their traces against residually priced
+    capacity; the shared arbiter ledger records at most the per-tenant
+    migration budget per period."""
+    tenants = TenantSet(
+        [
+            Tenant(name="alice", utg=linear_topology(), target_rate=6.0),
+            Tenant(name="bob", utg=diamond_topology(), target_rate=6.0),
+        ]
+    )
+    cluster = paper_cluster((2, 2, 2))
+    ms = schedule_tenants(list(tenants), cluster)
+    specs = [
+        TraceSpec(name="alice", n_windows=24, base_rate=min(4.0, ms.rates[0])),
+        TraceSpec(name="bob", n_windows=24, base_rate=min(4.0, ms.rates[1])),
+    ]
+    mtrace = compile_tenant_traces(tenants, specs, cluster, seed=7)
+    assert mtrace.capacity.shape == (24, cluster.n_machines)
+
+    rt = MultiTenantRuntime(ms, tenants, cluster, mtrace)
+    loads = rt.planned_loads()
+    assert loads.shape == (2, 24, cluster.n_machines)
+    # Planned loads are demand-capped by the offered trace.
+    assert np.all(loads >= 0.0)
+
+    res = rt.run(online=True, moves_per_period=4)
+    assert res.names == ("alice", "bob")
+    assert res.satisfaction.shape == (2,)
+    assert all(r.n_windows == 24 for r in res.results)
+    # Per-tenant budgets: admitted moves within one period never exceed
+    # the arbiter budget, for any tenant.
+    admitted: dict[tuple[str, int], int] = {}
+    for tenant, window, moves, ok in res.arbiter_log:
+        if ok:
+            key = (tenant, window // 10)
+            admitted[key] = admitted.get(key, 0) + moves
+    assert all(v <= 4 for v in admitted.values())
+
+
+def test_runtime_rejects_per_tenant_capacity_events():
+    from repro.runtime_stream import machine_slowdown
+
+    tenants = TenantSet(
+        [Tenant(name="a", utg=linear_topology(), target_rate=4.0)]
+    )
+    cluster = paper_cluster((1, 1, 1))
+    spec = TraceSpec(
+        name="a",
+        n_windows=8,
+        base_rate=2.0,
+        events=(machine_slowdown(0, factor=0.5, start=2),),
+    )
+    with pytest.raises(ValueError, match="capacity events"):
+        compile_tenant_traces(tenants, [spec], cluster)

@@ -1,0 +1,190 @@
+"""Multi-tenant goldens and batched-scoring parity.
+
+Golden: one frozen 3-tenant scenario pins placements, rates, and the
+candidate count — any drift in the water-filling loop, warm start, or
+tie-breaking shows up here first.
+
+Parity: the tenant-batched met-fold scoring (``TenantBatchScorer``) must
+agree with the explicit per-tenant residual-capacity NumPy loop to
+1e-12 relative with identical argmax — and the jitted JAX dispatch must
+agree with the NumPy dispatch the same way. Committed rates are scaled
+to 0.9x before the parity probes: exactly *at* the allocation the
+infeasibility cliff (a fully packed machine a few ulps over capacity)
+can legitimately make the two formulations disagree between 0 and a
+positive residual, which is a property of saturation, not of the fold.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ScheduleState,
+    SkewModel,
+    diamond_topology,
+    keyed_rolling_count_topology,
+    linear_topology,
+    paper_cluster,
+    star_topology,
+)
+from repro.multitenant import (
+    MultiTenantState,
+    Tenant,
+    TenantSet,
+    TenantBatchScorer,
+    schedule_tenants,
+)
+from repro.runtime_stream import TraceSpec
+
+# ------------------------------------------------------------------ golden
+
+GOLDEN = {
+    "alice": (3.317152100242718, [0, 0, 2, 1, 1, 1, 2, 1, 0, 4, 5, 3]),
+    "bob": (2.634569447432816, [2, 0, 4, 5, 0, 0, 1, 1, 4, 5, 3, 2]),
+    "carol": (0.869261695212773, [1, 2, 0, 2, 0, 4, 3, 3, 3, 3, 2, 4, 5, 4, 1, 5]),
+}
+GOLDEN_ROUNDS = 10
+GOLDEN_CANDIDATES = 43
+
+
+def _golden_fleet():
+    return [
+        Tenant(name="alice", utg=linear_topology(), target_rate=10.0, priority=2.0),
+        Tenant(name="bob", utg=diamond_topology(), target_rate=30.0, priority=1.0),
+        Tenant(name="carol", utg=star_topology(), target_rate=10.0, priority=1.0),
+    ]
+
+
+def test_three_tenant_golden():
+    ms = schedule_tenants(_golden_fleet(), paper_cluster((2, 2, 2)))
+    assert ms.rounds == GOLDEN_ROUNDS
+    assert ms.candidates_evaluated == GOLDEN_CANDIDATES
+    for name, (rate, placement) in GOLDEN.items():
+        alloc = ms.allocation(name)
+        assert alloc.rate == pytest.approx(rate, rel=1e-12), name
+        assert alloc.etg.task_machine().tolist() == placement, name
+
+
+# ------------------------------------------------------------------ parity
+
+
+def _skewed_tenant(name, cluster, seed=11):
+    utg = keyed_rolling_count_topology()
+    reals = (
+        TraceSpec(name="probe", n_windows=4, base_rate=1.0)
+        .compile(cluster, seed=seed, utg=utg)
+        .realizations_at(0)
+    )
+    skew = SkewModel(utg, {e: r.shares for e, r in reals.items()})
+    return Tenant(name=name, utg=utg, target_rate=8.0, skew=skew)
+
+
+def _margin_state(tenants, cluster, margin=0.9):
+    """Schedule the fleet, then rebuild the shared state with rates scaled
+    to ``margin`` of the allocation (off the infeasibility cliff)."""
+    tset = TenantSet(tenants)
+    ms = schedule_tenants(tenants, cluster)
+    states = [
+        ScheduleState.from_etg(a.etg, cluster, skew=t.skew)
+        for a, t in zip(ms.allocations, tenants)
+    ]
+    return MultiTenantState(tset, cluster, states, rates=ms.rates * margin)
+
+
+def _relocation_sweeps(mt, cap_rows=36):
+    """Per tenant, a count-preserving relocation sweep: each task to each
+    other machine, truncated to ``cap_rows`` rows for test speed."""
+    m = mt.cluster.n_machines
+    sweeps = []
+    for t, st in enumerate(mt.states):
+        base = st.task_machine()
+        rows = []
+        for col in range(base.shape[0]):
+            for dest in range(m):
+                if dest == base[col]:
+                    continue
+                row = base.copy()
+                row[col] = dest
+                rows.append(row)
+        sweeps.append((t, np.stack(rows[:cap_rows])))
+    return sweeps
+
+
+def _fleet_plain():
+    return [
+        Tenant(name="alice", utg=linear_topology(), target_rate=10.0, priority=2.0),
+        Tenant(name="bob", utg=diamond_topology(), target_rate=30.0, priority=1.0),
+        Tenant(name="carol", utg=star_topology(), target_rate=10.0, priority=1.0),
+    ]
+
+
+def _fleet_keyed(cluster):
+    return [
+        Tenant(name="alice", utg=linear_topology(), target_rate=10.0),
+        _skewed_tenant("kira", cluster),
+    ]
+
+
+@pytest.mark.parametrize("keyed", [False, True], ids=["plain", "keyed"])
+def test_batched_metfold_matches_reference_loop(keyed):
+    """Met-fold batched scoring == explicit residual-capacity per-tenant
+    NumPy loop: 1e-12 relative, identical argmax."""
+    cluster = paper_cluster((2, 2, 2))
+    tenants = _fleet_keyed(cluster) if keyed else _fleet_plain()
+    mt = _margin_state(tenants, cluster)
+    scorer = TenantBatchScorer(mt, backend="numpy")
+    sweeps = _relocation_sweeps(mt)
+    scored = scorer.score(sweeps)
+    assert scorer.candidates_evaluated == sum(r.shape[0] for _, r in sweeps)
+    for (t, rows), (rates, thpts) in zip(sweeps, scored):
+        ref_rates, ref_thpts = scorer.reference_scores(t, rows)
+        np.testing.assert_allclose(rates, ref_rates, rtol=1e-12, atol=1e-12)
+        np.testing.assert_allclose(thpts, ref_thpts, rtol=1e-12, atol=1e-12)
+        assert int(np.argmax(rates)) == int(np.argmax(ref_rates)), t
+
+
+@pytest.mark.parametrize("keyed", [False, True], ids=["plain", "keyed"])
+def test_batched_jax_matches_numpy_dispatch(keyed):
+    """The jitted per-row kernel and the NumPy closed form agree on the
+    tenant-batched tables: 1e-12 relative, identical argmax."""
+    pytest.importorskip("jax")
+    cluster = paper_cluster((2, 2, 2))
+    tenants = _fleet_keyed(cluster) if keyed else _fleet_plain()
+    mt = _margin_state(tenants, cluster)
+    sweeps = _relocation_sweeps(mt)
+    scored_np = TenantBatchScorer(mt, backend="numpy").score(sweeps)
+    scored_jax = TenantBatchScorer(mt, backend="jax").score(sweeps)
+    for (np_r, np_t), (jx_r, jx_t) in zip(scored_np, scored_jax):
+        np.testing.assert_allclose(jx_r, np_r, rtol=1e-12, atol=1e-12)
+        np.testing.assert_allclose(jx_t, np_t, rtol=1e-12, atol=1e-12)
+        assert int(np.argmax(jx_r)) == int(np.argmax(np_r))
+
+
+def test_empty_and_zero_row_sweeps():
+    """B = 0 sweeps and empty sweep lists are guarded, not kernel calls."""
+    cluster = paper_cluster((1, 1, 1))
+    tenants = [
+        Tenant(name="a", utg=linear_topology(), target_rate=5.0),
+        Tenant(name="b", utg=star_topology(), target_rate=5.0),
+    ]
+    mt = _margin_state(tenants, cluster)
+    scorer = TenantBatchScorer(mt, backend="auto")
+    width_a = mt.states[0].task_machine().shape[0]
+    out = scorer.score([(0, np.zeros((0, width_a), dtype=np.int64))])
+    assert out[0][0].shape == (0,) and out[0][1].shape == (0,)
+    assert scorer.score([]) == []
+    assert scorer.candidates_evaluated == 0
+
+    with pytest.raises(ValueError, match="sweep must be"):
+        scorer.score([(0, np.zeros((2, width_a + 1), dtype=np.int64))])
+
+
+def test_residual_rates_match_state_view():
+    """The one-call incumbent sweep agrees with MultiTenantState's
+    per-tenant residual closed form (margin rates, off the cliff)."""
+    cluster = paper_cluster((2, 2, 2))
+    mt = _margin_state(_fleet_plain(), cluster)
+    resid = TenantBatchScorer(mt, backend="numpy").residual_rates()
+    for t in range(len(mt.states)):
+        np.testing.assert_allclose(
+            resid[t], mt.residual_rstar(t), rtol=1e-9, atol=1e-12
+        )

@@ -1,0 +1,51 @@
+"""100-tenant soak: the bench scenario as a gated test (slow tier).
+
+The fast tier caps fleets at a handful of tenants; this suite runs the
+``BENCH_multitenant`` scale scenario end to end with per-round validation
+on, so the shared-load invariant, the MET-deferral fixpoint, and the
+no-regression floors are all exercised at the fleet size the tentpole
+claims — not just at toy sizes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ScheduleState, paper_cluster
+from repro.multitenant import (
+    MultiTenantState,
+    TenantSet,
+    fair_slice_floors,
+    schedule_tenants,
+)
+
+from benchmarks.bench_multitenant import FLEET_KW, SEED, _fleet
+
+pytestmark = pytest.mark.slow
+
+
+@pytest.mark.parametrize(
+    "cap_scale, min_floors", [(4.0, 50), (1.0, 10)], ids=["roomy", "paper"]
+)
+def test_hundred_tenant_soak(cap_scale, min_floors):
+    rng = np.random.default_rng(SEED)
+    tenants = _fleet(100, rng)
+    cluster = paper_cluster((20, 30, 40))
+    cluster = cluster.with_capacity(cluster.capacity * cap_scale)
+
+    ms = schedule_tenants(tenants, cluster, validate=True, **FLEET_KW)
+
+    states = [
+        ScheduleState.from_etg(a.etg, cluster, skew=t.skew)
+        for a, t in zip(ms.allocations, tenants)
+    ]
+    mt = MultiTenantState(TenantSet(tenants), cluster, states, rates=ms.rates)
+    assert mt.feasible(slack=1e-9)
+    assert np.all(ms.rates >= 0.0)
+
+    floors = fair_slice_floors(
+        tenants, cluster, warm_refine_rounds=FLEET_KW["warm_refine_rounds"]
+    )
+    assert np.all(ms.rates >= floors * (1.0 - 1e-6))
+    # The paper-capacity variant genuinely exercises the deferral path
+    # (most floors collapse to 0); the roomy one keeps most non-vacuous.
+    assert int(np.sum(floors > 0.0)) >= min_floors

@@ -1,0 +1,129 @@
+"""Exact rational R* boundary arbitration (regression for the old 1e-9
+re-check band).
+
+The float closed form computes R* = min_w (cap_w - met_w) / var_w in
+binary64; rates within one part in 1e9 of that quotient used to be
+re-checked against a heuristic tolerance. The exact path instead treats
+the cached float coefficients as rationals, so the feasibility boundary
+is a hard number: ``rate`` is stable iff ``Fraction(rate) <= R*_exact``,
+bit-for-bit, with no band.
+"""
+
+from fractions import Fraction
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ScheduleState,
+    diamond_topology,
+    linear_topology,
+    paper_cluster,
+    schedule,
+    star_topology,
+)
+
+TOPOS = {
+    "linear": linear_topology,
+    "diamond": diamond_topology,
+    "star": star_topology,
+}
+
+
+def _state(topo_name, counts=(1, 1, 1)):
+    cluster = paper_cluster(counts)
+    etg = schedule(TOPOS[topo_name](), cluster, r0=1.0, rate_epsilon=0.5).etg
+    return ScheduleState.from_etg(etg, cluster)
+
+
+@pytest.mark.parametrize("topo", sorted(TOPOS))
+def test_exact_rstar_brackets_float_rstar(topo):
+    """The float R* sits within one ulp-scale step of the exact rational
+    boundary: float(R*_exact) rounds to the float R* (same closed form,
+    same coefficients)."""
+    st = _state(topo)
+    r_float = st.max_stable_rate()
+    r_exact = st.max_stable_rate_exact()
+    assert r_exact is not None and r_exact > 0
+    assert float(r_exact) == pytest.approx(r_float, rel=1e-15)
+
+
+@pytest.mark.parametrize("topo", sorted(TOPOS))
+def test_boundary_is_sharp(topo):
+    """Feasibility flips exactly at the rational boundary: the largest
+    float <= R*_exact is feasible, the smallest float > R*_exact is not —
+    no band, no tolerance."""
+    st = _state(topo)
+    r_exact = st.max_stable_rate_exact()
+    r = float(r_exact)
+    # float(r_exact) may round up or down; pick the two floats that
+    # straddle the rational boundary.
+    lo = r if Fraction(r) <= r_exact else np.nextafter(r, 0.0)
+    hi = np.nextafter(lo, np.inf)
+    assert Fraction(float(lo)) <= r_exact < Fraction(float(hi))
+    assert st.feasible_linear_exact(float(lo))
+    assert not st.feasible_linear_exact(float(hi))
+
+
+@pytest.mark.parametrize("topo", sorted(TOPOS))
+def test_exact_agrees_with_fraction_comparison(topo):
+    """feasible_linear_exact(rate) == (Fraction(rate) <= R*_exact) for a
+    sweep of rates around the boundary."""
+    st = _state(topo)
+    r_exact = st.max_stable_rate_exact()
+    r = float(r_exact)
+    probes = [
+        0.0,
+        0.5 * r,
+        np.nextafter(r, 0.0),
+        r,
+        np.nextafter(r, np.inf),
+        1.5 * r,
+    ]
+    for rate in probes:
+        assert st.feasible_linear_exact(float(rate)) == (
+            Fraction(float(rate)) <= r_exact
+        )
+
+
+def test_first_over_machine_identifies_binding_machine():
+    """Just past the boundary, the first over machine is the argmin of the
+    float head/var limits (the binding machine of the closed form)."""
+    st = _state("diamond", counts=(2, 2, 2))
+    r_exact = st.max_stable_rate_exact()
+    over = np.nextafter(float(r_exact), np.inf)
+    if Fraction(float(over)) <= r_exact:  # float(r_exact) rounded down
+        over = np.nextafter(over, np.inf)
+    w = st.first_over_machine_exact(float(over))
+    assert w is not None
+    head = st.cluster.capacity - st.met_load
+    with np.errstate(divide="ignore"):
+        limits = np.where(
+            st.var_load > 0.0, head / np.maximum(st.var_load, 1e-300), np.inf
+        )
+    assert limits[w] == limits.min()
+    assert st.first_over_machine_exact(0.0) is None
+
+
+def test_met_only_infeasibility_is_negative():
+    """A placement whose fixed MET alone exceeds a machine's capacity
+    reports a negative exact R* (and rate 0.0 from the float path)."""
+    cluster = paper_cluster((1, 1, 1))
+    etg = schedule(linear_topology(), cluster, r0=1.0, rate_epsilon=0.5).etg
+    tiny = cluster.with_capacity(np.full(cluster.n_machines, 0.5))
+    st = ScheduleState.from_etg(etg, tiny)
+    r_exact = st.max_stable_rate_exact()
+    assert r_exact is not None and r_exact < 0
+    assert not st.feasible_linear_exact(0.0)
+    assert st.max_stable_rate() == 0.0
+
+
+def test_schedule_pipeline_unchanged_by_exact_arbiter():
+    """End-to-end schedule() still lands on rates the exact model calls
+    feasible — the arbiter only sharpens the band, never admits an
+    infeasible rate."""
+    for topo in TOPOS.values():
+        cluster = paper_cluster((2, 2, 2))
+        sched = schedule(topo(), cluster, r0=1.0, rate_epsilon=0.5)
+        st = ScheduleState.from_etg(sched.etg, cluster)
+        assert st.feasible_linear_exact(sched.rate)
