@@ -1,6 +1,6 @@
 """Online-runtime benchmark (``BENCH_runtime.json``).
 
-Executes three policies against every drift scenario in the streaming
+Executes the policy ladder against every drift scenario in the streaming
 runtime (``repro.runtime_stream``):
 
 * **static** — a schedule provisioned for the scenario's *initial* rate
@@ -8,28 +8,34 @@ runtime (``repro.runtime_stream``):
   then frozen for the whole trace;
 * **online** — the same starting schedule driven by ``OnlineController``
   (windowed drift detection, incremental ``refine``-move replanning, the
-  migration cost/benefit guard);
+  state-aware migration cost/benefit guard);
+* **online_blind** (keyed/stateful rows only) — the same controller with
+  ``state_aware=False``: flat per-move pricing, no state in the ledger —
+  the pre-ISSUE-8 cost model, kept as the ablation baseline;
 * **oracle** — a full ``schedule()`` re-plan at every window with free
-  migrations (``OracleRescheduler`` + ``migration_pause=0``), the
+  migrations (``OracleRescheduler`` + ``migration_pause=0``), cached per
+  *(capacity, skew epoch)* and polished skew-aware on keyed rows — the
   adaptation upper bound.
 
-The acceptance gates recorded per scenario (ISSUE 4): the online
-controller's sustained throughput must be >= the static schedule's and
-within 10% of the oracle's, with migration counts reported. The JAX
-evaluator's throughput for the static policy is cross-checked against the
-Python executor as a parity smoke.
+Per row the JSON records sustained throughput for each policy, the
+latency-SLO column (fraction of tail windows whose Little's-law latency
+estimate meets ``SLO_S`` seconds), migration counts, and the acceptance
+booleans. The elastic rows (``machine_addition``) run on a *fleet*
+cluster whose spare machine's capacity column switches on mid-trace; the
+stateful keyed rows ship keyed operator state at a finite
+``state_transfer_rate``, which is where the state-aware controller
+separates from the blind one.
 
-The keyed-skew rows (ISSUE 5, ``keyed_rolling_count``) pit the skew-aware
-controller against an even-split-scored static provision on fields-grouped
-traces; there the oracle (a full even-split ``schedule()``) is itself
-skew-blind, so ``within_10pct_of_oracle`` is informational — the gate on
-those rows is ``beats_static``.
+``--check BENCH.json`` is the CI smoke gate: it fails unless every row
+has ``beats_static`` (online sustained >= static) and the recorded
+evaluator parity holds.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import numpy as np
@@ -49,8 +55,10 @@ from repro.runtime_stream import (
 from repro.runtime_stream.traces import (
     TraceSpec,
     burst_trace,
+    elastic_trace,
     failure_trace,
     key_skew_shift,
+    machine_addition,
     machine_slowdown,
     ramp_trace,
     rate_ramp,
@@ -60,31 +68,44 @@ from repro.runtime_stream.traces import (
 
 N_WINDOWS = 240
 SEED = 0
+SLO_S = 5.0  # latency SLO: tail windows must estimate <= 5 s queueing delay
+STATE_PER_TUPLE = 25.0   # keyed state retained per unit tuple rate (stateful rows)
+STATE_RATE = 25.0        # state tuples shippable per second while migrating
 # One event-loop config for every policy and scenario: a 120-tuple queue
 # bound makes sustained overload trip real back-pressure (the default 500
 # lets short transients hide entirely inside the queues).
 CONFIG = RuntimeConfig(max_queue=120.0)
 ORACLE_CONFIG = RuntimeConfig(max_queue=120.0, migration_pause=0)
+# Stateful keyed rows: migrations ship keyed state at a finite rate, so a
+# hot instance's restart pauses for multiple windows. The oracle keeps its
+# idealized free migrations (instant state transfer).
+STATE_CONFIG = RuntimeConfig(max_queue=120.0, state_transfer_rate=STATE_RATE)
+DRAIN_CONFIG = RuntimeConfig(
+    max_queue=120.0, state_transfer_rate=STATE_RATE, capacity_notice=25
+)
 
 
-def _scenarios(topo, cluster) -> list[tuple[TraceSpec, float]]:
-    """(trace spec, provisioning rate) per drift scenario.
+def _scenarios(topo, cluster) -> list[tuple[TraceSpec, float, object, object]]:
+    """(trace spec, provisioning rate, exec cluster, config) per scenario.
 
     Rates are expressed against the cluster's maximum stable rate for the
     topology (schedule+refine), so scenarios scale with cluster shape.
+    The elastic row runs on a fleet with one spare i5 whose capacity
+    column switches on mid-trace (``machine_addition``).
     """
     full = refine(schedule(topo, cluster, r0=1.0, rate_epsilon=0.05).etg, cluster)
     r = full.rate
     big = int(np.argmax(cluster.capacity))  # the most capable machine
-    return [
-        (ramp_trace(0.3 * r, 1.2 * r, n_windows=N_WINDOWS), 0.3 * r),
+    rows: list[tuple[TraceSpec, float, object, object]] = [
+        (ramp_trace(0.3 * r, 1.2 * r, n_windows=N_WINDOWS), 0.3 * r, cluster, CONFIG),
         (burst_trace(0.5 * r, factor=3.0, n_windows=N_WINDOWS, every=60,
-                     width=20, jitter=3), 0.5 * r),
+                     width=20, jitter=3), 0.5 * r, cluster, CONFIG),
         (sine_trace(0.65 * r, amplitude=0.45, n_windows=N_WINDOWS, period=160),
-         0.65 * r),
+         0.65 * r, cluster, CONFIG),
         (slowdown_trace(0.9 * r, machine=big, factor=0.5, n_windows=N_WINDOWS),
-         0.9 * r),
-        (failure_trace(0.85 * r, machine=big, n_windows=N_WINDOWS), 0.85 * r),
+         0.9 * r, cluster, CONFIG),
+        (failure_trace(0.85 * r, machine=big, n_windows=N_WINDOWS), 0.85 * r,
+         cluster, CONFIG),
         (
             TraceSpec(
                 name="ramp_slowdown",
@@ -96,29 +117,53 @@ def _scenarios(topo, cluster) -> list[tuple[TraceSpec, float]]:
                 ),
             ),
             0.4 * r,
+            cluster,
+            CONFIG,
         ),
     ]
+    # Cloud scale-out: a spare i5 (fleet machine 3) joins after the rate
+    # ramp passes the initial fleet's bound — only a controller that grows
+    # onto the new capacity column rides the ramp.
+    fleet = paper_cluster((1, 1, 2))
+    r4 = refine(schedule(topo, fleet, r0=1.0, rate_epsilon=0.05).etg, fleet).rate
+    rows.append(
+        (
+            elastic_trace(0.5 * r, 1.05 * r4, machine=3, n_windows=N_WINDOWS,
+                          join=120),
+            0.5 * r,
+            fleet,
+            CONFIG,
+        )
+    )
+    return rows
 
 
-def _keyed_scenarios(topo, cluster) -> list[tuple[TraceSpec, float]]:
-    """Keyed-skew drift rows (ISSUE 5): the static baseline provisions by
-    the even-split closed form for the offered rate; the realized key skew
+def _keyed_scenarios(topo, cluster) -> list[tuple[TraceSpec, float, object, object]]:
+    """Keyed-skew drift rows: the static baseline provisions by the
+    even-split closed form for the offered rate; the realized key skew
     saturates a hot instance well below that, so only the skew-aware
-    online controller sustains the load.
+    online controller sustains the load. All rows run with operator state
+    (``state_per_tuple`` > 0) shipping at a finite transfer rate — the
+    regime separating the state-aware controller from the blind one.
 
     * ``keyed_hot`` — constant offered load between the skew-aware and the
       even-split stable rate: the static schedule back-pressures from the
       start, the controller replans against the realized shares;
     * ``keyed_shift`` — sustainable start, then ``key_skew_shift`` re-rolls
       the hot keys onto new instances mid-trace (rate and capacity never
-      change — drift the even-split signals cannot see).
+      change — drift the even-split signals cannot see);
+    * ``keyed_elastic`` — scale-out under keyed state: a spare machine
+      joins mid-ramp, then leaves with ``capacity_notice`` windows of
+      warning (drain-before-removal under a stateful migration cost).
     """
     full = refine(schedule(topo, cluster, r0=1.0, rate_epsilon=0.05).etg, cluster)
     r = full.rate  # even-split closed form — intentionally skew-blind
-    return [
+    rows: list[tuple[TraceSpec, float, object, object]] = [
         (
-            TraceSpec(name="keyed_hot", n_windows=N_WINDOWS, base_rate=0.95 * r),
-            0.95 * r,
+            TraceSpec(name="keyed_hot", n_windows=N_WINDOWS, base_rate=1.0 * r),
+            1.0 * r,
+            cluster,
+            STATE_CONFIG,
         ),
         (
             TraceSpec(
@@ -128,35 +173,68 @@ def _keyed_scenarios(topo, cluster) -> list[tuple[TraceSpec, float]]:
                 events=(key_skew_shift(start=N_WINDOWS // 3, zipf_s=2.0),),
             ),
             0.8 * r,
+            cluster,
+            STATE_CONFIG,
         ),
     ]
+    fleet = paper_cluster((1, 1, 2))
+    rows.append(
+        (
+            TraceSpec(
+                name="keyed_elastic",
+                n_windows=N_WINDOWS,
+                base_rate=0.7 * r,
+                events=(
+                    rate_ramp(1.2 * r, start=20, end=100),
+                    machine_addition(3, start=80, end=160),
+                ),
+            ),
+            0.7 * r,
+            fleet,
+            DRAIN_CONFIG,
+        )
+    )
+    return rows
 
 
-def run_scenario(topo, cluster, spec: TraceSpec, provision_rate: float) -> dict:
+def run_scenario(topo, spec: TraceSpec, provision_rate: float, cluster,
+                 config: RuntimeConfig) -> dict:
     trace = spec.compile(cluster, seed=SEED, utg=topo)
-    start_etg = provision_schedule(topo, cluster, provision_rate)
+    # Provision against the machines alive at window 0 (an elastic fleet's
+    # spare column is off until its machine_addition fires).
+    alive0 = trace.capacity[0] > 0.0
+    prov_cluster = (
+        cluster if alive0.all() else paper_cluster(
+            tuple(
+                int(np.sum(cluster.machine_types[alive0] == t))
+                for t in range(cluster.profile.n_machine_types)
+            )
+        )
+    )
+    start_etg = provision_schedule(topo, prov_cluster, provision_rate)
+    oracle_config = ORACLE_CONFIG
 
     t0 = time.perf_counter()
-    static = StreamExecutor(start_etg, cluster, trace, config=CONFIG).run()
+    static = StreamExecutor(start_etg, cluster, trace, config=config).run()
     t_static = time.perf_counter() - t0
 
     ctl = OnlineController(topo, cluster, period=10)
     t0 = time.perf_counter()
-    online = StreamExecutor(start_etg, cluster, trace, config=CONFIG).run(
+    online = StreamExecutor(start_etg, cluster, trace, config=config).run(
         controller=ctl
     )
     t_online = time.perf_counter() - t0
 
     t0 = time.perf_counter()
     oracle = StreamExecutor(
-        start_etg, cluster, trace, config=ORACLE_CONFIG
+        start_etg, cluster, trace, config=oracle_config
     ).run(controller=OracleRescheduler(topo, cluster))
     t_oracle = time.perf_counter() - t0
 
     s_static = static.sustained_throughput()
     s_online = online.sustained_throughput()
     s_oracle = oracle.sustained_throughput()
-    return {
+    row = {
         "scenario": trace.name,
         "windows": trace.n_windows,
         "provision_rate": round(provision_rate, 3),
@@ -165,6 +243,10 @@ def run_scenario(topo, cluster, spec: TraceSpec, provision_rate: float) -> dict:
         "sustained_oracle": round(s_oracle, 3),
         "online_vs_static": round(s_online / max(s_static, 1e-9), 3),
         "online_vs_oracle": round(s_online / max(s_oracle, 1e-9), 3),
+        "latency_slo_s": SLO_S,
+        "latency_slo_static": round(static.latency_slo_frac(SLO_S), 3),
+        "latency_slo_online": round(online.latency_slo_frac(SLO_S), 3),
+        "latency_slo_oracle": round(oracle.latency_slo_frac(SLO_S), 3),
         "online_migrations": int(online.migrations.sum()),
         "online_replans": int((online.migrations > 0).sum()),
         "oracle_migrations": int(oracle.migrations.sum()),
@@ -175,6 +257,31 @@ def run_scenario(topo, cluster, spec: TraceSpec, provision_rate: float) -> dict:
         "online_s": round(t_online, 3),
         "oracle_s": round(t_oracle, 3),
     }
+    if topo.groupings:
+        # Ablation on keyed/stateful rows: the state-blind controller
+        # prices the same replans flat (no state in the ledger, no pause
+        # loss from state shipping) — the pre-ISSUE-8 guard.
+        blind = OnlineController(topo, cluster, period=10, state_aware=False)
+        res_blind = StreamExecutor(
+            start_etg, cluster, trace, config=config
+        ).run(controller=blind)
+        s_blind = res_blind.sustained_throughput()
+        row["sustained_online_blind"] = round(s_blind, 3)
+        row["latency_slo_online_blind"] = round(
+            res_blind.latency_slo_frac(SLO_S), 3
+        )
+        row["blind_migrations"] = int(res_blind.migrations.sum())
+        row["aware_beats_blind"] = bool(s_online >= s_blind)
+        if bool(np.all(trace.capacity == trace.capacity[:1])):
+            # The re-keyed-oracle acceptance (ISSUE 8): on a fixed fleet
+            # the per-(capacity, skew-epoch) oracle must not lose to the
+            # online controller. Elastic keyed rows are exempt — there
+            # the oracle replans from scratch at every capacity flip and
+            # refine's non-convex landscape can land it in a worse basin
+            # than the controller's state-aware inertia holds; the raw
+            # sustained numbers stay recorded for inspection.
+            row["oracle_not_below_online"] = bool(s_oracle >= 0.99 * s_online)
+    return row
 
 
 def parity_smoke(topo, cluster) -> dict:
@@ -194,6 +301,7 @@ def parity_smoke(topo, cluster) -> dict:
     b = evaluate_policies_batch(full.etg, cluster, traces, policies,
                                 backend="auto")
     diff = float(np.max(np.abs(a.throughput - b.throughput)))
+    lat_diff = float(np.max(np.abs(a.latency() - b.latency())))
     try:
         import jax  # noqa: F401
 
@@ -203,8 +311,38 @@ def parity_smoke(topo, cluster) -> dict:
     return {
         "jax_available": jax_used,
         "max_abs_throughput_diff": diff,
+        "max_abs_latency_diff": lat_diff,
         "within_1e9": bool(diff <= 1e-9),
     }
+
+
+def check(json_path: str) -> int:
+    """CI smoke gate: every recorded row must have online >= static, the
+    keyed ablation rows must not lose to the blind controller, and the
+    evaluator parity must hold."""
+    with open(json_path) as f:
+        data = json.load(f)
+    bad: list[str] = []
+    for topo_name, rows in data["scenarios"].items():
+        for row in rows:
+            tag = f"{topo_name}/{row['scenario']}"
+            if not row.get("beats_static", False):
+                bad.append(f"{tag}: online < static")
+            if "aware_beats_blind" in row and not row["aware_beats_blind"]:
+                bad.append(f"{tag}: state-aware < state-blind")
+            if "oracle_not_below_online" in row and not row["oracle_not_below_online"]:
+                bad.append(f"{tag}: oracle lost to the online controller")
+    parity = data.get("parity", {})
+    if parity.get("jax_available") and not parity.get("within_1e9", False):
+        bad.append("parity: JAX evaluator drifted past 1e-9")
+    if bad:
+        for line in bad:
+            print(f"runtime check FAILED: {line}")
+        return 1
+    n = sum(len(rows) for rows in data["scenarios"].values())
+    print(f"runtime check ok: {n} rows, online >= static on all, "
+          "keyed ablation and parity hold")
+    return 0
 
 
 def main(json_path: str | None = None) -> None:
@@ -215,23 +353,30 @@ def main(json_path: str | None = None) -> None:
         ("rolling_count", rolling_count_topology(), _scenarios),
         (
             "keyed_rolling_count",
-            keyed_rolling_count_topology(n_keys=16, zipf_s=1.5),
+            keyed_rolling_count_topology(
+                n_keys=16, zipf_s=1.5, state_per_tuple=STATE_PER_TUPLE
+            ),
             _keyed_scenarios,
         ),
     ):
         rows = [
-            run_scenario(topo, cluster, spec, rate)
-            for spec, rate in scen_fn(topo, cluster)
+            run_scenario(topo, spec, rate, clu, cfg)
+            for spec, rate, clu, cfg in scen_fn(topo, cluster)
         ]
         results[topo_name] = rows
         for row in rows:
+            extra = (
+                f";blind={row['sustained_online_blind']}"
+                if "sustained_online_blind" in row
+                else ""
+            )
             emit(
                 f"runtime_{topo_name}_{row['scenario']}",
                 row["online_s"] * 1e6,
                 f"online={row['sustained_online']};static={row['sustained_static']};"
                 f"oracle={row['sustained_oracle']};migrations={row['online_migrations']};"
-                f"beats_static={row['beats_static']};"
-                f"within_10pct={row['within_10pct_of_oracle']}",
+                f"slo={row['latency_slo_online']};beats_static={row['beats_static']};"
+                f"within_10pct={row['within_10pct_of_oracle']}{extra}",
             )
     parity = parity_smoke(linear_topology(), cluster)
     emit(
@@ -249,5 +394,9 @@ def main(json_path: str | None = None) -> None:
 if __name__ == "__main__":
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--json", default=None, help="write BENCH_runtime.json here")
+    parser.add_argument("--check", default=None, metavar="JSON",
+                        help="validate a recorded BENCH_runtime.json and exit")
     args = parser.parse_args()
+    if args.check:
+        sys.exit(check(args.check))
     main(json_path=args.json)

@@ -96,9 +96,31 @@ class SkewModel:
     even-split floats (``instance_fractions`` returns None for them), so a
     skew-scored schedule only departs from the even-split score where keys
     actually route.
+
+    The model also carries the operators' *keyed state*: each fields edge
+    declares ``state_per_tuple`` (state tuples retained per unit of the
+    edge's tuple rate — ``FieldsGrouping.state_per_tuple``), and instance k
+    of a keyed component owns state proportional to the key share it
+    handles:
+
+        state_{c,k}(N) = sum_e state_per_tuple_e * alpha_p * CIR_p(1) * shares_e(N)[k]
+
+    — the SkewModel fractions × a per-component state size. Shuffle
+    components (and fields edges with ``state_per_tuple == 0``) carry no
+    keyed state, so a shuffle-only topology's migrations stay free of
+    state transfer (``per_task_state`` is all zeros) and drop-only replans
+    remain free.
     """
 
-    __slots__ = ("utg", "cir_unit", "_keyed", "_frac_cache", "_unit_ir_cache")
+    __slots__ = (
+        "utg",
+        "cir_unit",
+        "_keyed",
+        "_state_mix",
+        "_frac_cache",
+        "_unit_ir_cache",
+        "_state_cache",
+    )
 
     def __init__(
         self,
@@ -119,26 +141,32 @@ class SkewModel:
             )
         self.utg = utg
         self.cir_unit = component_rates(utg, 1.0)
-        # Per keyed component: (even_weight, [(edge_weight, shares_fn), ...]).
+        # Per keyed component: (even_weight, [(edge_weight, shares_fn), ...])
+        # and the state mix [(state_size_e, shares_fn), ...] where
+        # state_size_e = state_per_tuple_e * the edge's unit-rate tuple flow.
         self._keyed: dict[int, tuple[float, list]] = {}
+        self._state_mix: dict[int, list] = {}
         for c in utg.keyed_components:
             cir_c = float(self.cir_unit[c])
             mix: list[tuple[float, Callable[[int], np.ndarray]]] = []
+            smix: list[tuple[float, Callable[[int], np.ndarray]]] = []
             keyed_w = 0.0
             for g in utg.groupings:
                 p, dst = g.edge
                 if dst != c:
                     continue
-                w = (
-                    float(utg.alpha[p] * self.cir_unit[p]) / cir_c
-                    if cir_c > 0.0
-                    else 0.0
-                )
+                flow = float(utg.alpha[p] * self.cir_unit[p])
+                w = flow / cir_c if cir_c > 0.0 else 0.0
                 mix.append((w, edge_shares[g.edge]))
                 keyed_w += w
+                if g.state_per_tuple > 0.0:
+                    smix.append((g.state_per_tuple * flow, edge_shares[g.edge]))
             self._keyed[c] = (max(1.0 - keyed_w, 0.0), mix)
+            if smix:
+                self._state_mix[c] = smix
         self._frac_cache: dict[tuple[int, int], np.ndarray] = {}
         self._unit_ir_cache: dict[tuple[int, ...], np.ndarray] = {}
+        self._state_cache: dict[tuple[int, ...], np.ndarray] = {}
 
     @property
     def keyed_components(self) -> list[int]:
@@ -187,6 +215,49 @@ class SkewModel:
         # reshape: np.unique's inverse shape for axis=0 varies across
         # NumPy 2.x minors (flat vs shaped); flat indexing works on all.
         return rows[inverse.reshape(-1)]
+
+    # ------------------------------------------------------- keyed state
+
+    @property
+    def has_state(self) -> bool:
+        """True when any fields edge declares ``state_per_tuple > 0`` —
+        i.e. migrations can ship state and should be priced for it."""
+        return bool(self._state_mix)
+
+    def component_state(self) -> np.ndarray:
+        """(n,) total keyed state per component (state tuples): the sum of
+        every in-edge's ``state_per_tuple`` × unit-rate tuple flow.
+        Invariant under the instance count — resharding moves state
+        between instances, it never creates or destroys it."""
+        out = np.zeros(self.utg.n_components, dtype=np.float64)
+        for c, smix in self._state_mix.items():
+            out[c] = sum(s for s, _ in smix)
+        return out
+
+    def instance_state(self, component: int, n: int) -> np.ndarray:
+        """(n,) keyed state held by each instance of ``component`` at count
+        ``n`` — the component's state split by realized key share (an
+        instance owning the hot key holds proportionally more state).
+        Zeros for stateless/shuffle components."""
+        smix = self._state_mix.get(component)
+        out = np.zeros(int(n), dtype=np.float64)
+        if smix is None:
+            return out
+        for s_e, shares_fn in smix:
+            out = out + s_e * shares_fn(int(n))
+        return out
+
+    def per_task_state(self, n_instances: np.ndarray) -> np.ndarray:
+        """(T,) keyed state per task (paper eq. 3 task order) for an (n,)
+        instance-count vector; zeros wherever no stateful fields edge
+        lands."""
+        key = tuple(int(k) for k in np.asarray(n_instances))
+        out = self._state_cache.get(key)
+        if out is None:
+            parts = [self.instance_state(c, nk) for c, nk in enumerate(key)]
+            out = np.concatenate(parts) if parts else np.zeros(0)
+            self._state_cache[key] = out
+        return out
 
 
 @dataclasses.dataclass(frozen=True)

@@ -52,11 +52,21 @@ class FieldsGrouping:
     The spec is *structural*: which instance each key lands on (the hash
     values) is drawn at trace ``compile(seed)`` time like all other
     randomness (see ``runtime_stream.traces.KeyRealization``).
+
+    ``state_per_tuple`` sizes the downstream operator's *keyed state*:
+    state tuples retained per unit of the edge's tuple rate (a rolling
+    counter keeps one window of per-key aggregates; a join keeps its
+    buffered side). An instance's standing state is proportional to the
+    key share it owns (``SkewModel.per_task_state``), so migrating a
+    hot-key instance ships more state than a cold one. 0 (the default)
+    means a stateless operator — migration stays priced by move count
+    alone and the runtime behaves exactly as before.
     """
 
     edge: tuple[int, int]
     n_keys: int = 64
     zipf_s: float = 1.0
+    state_per_tuple: float = 0.0
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "edge", (int(self.edge[0]), int(self.edge[1])))
@@ -64,8 +74,11 @@ class FieldsGrouping:
             raise ValueError("fields grouping needs at least one key")
         if not (float(self.zipf_s) >= 0.0):
             raise ValueError("zipf_s must be >= 0 (0 = uniform keys)")
+        if not (float(self.state_per_tuple) >= 0.0):
+            raise ValueError("state_per_tuple must be >= 0 (0 = stateless)")
         object.__setattr__(self, "n_keys", int(self.n_keys))
         object.__setattr__(self, "zipf_s", float(self.zipf_s))
+        object.__setattr__(self, "state_per_tuple", float(self.state_per_tuple))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -296,16 +309,23 @@ def rolling_count_topology() -> UserGraph:
     )
 
 
-def keyed_rolling_count_topology(n_keys: int = 32, zipf_s: float = 1.2) -> UserGraph:
+def keyed_rolling_count_topology(
+    n_keys: int = 32, zipf_s: float = 1.2, state_per_tuple: float = 0.0
+) -> UserGraph:
     """RollingCount with its word->counter edge fields-grouped.
 
     The canonical keyed-stream shape: the split bolt fans sentences into
     words (alpha > 1) and each word is pinned to one rolling counter by
     fields grouping, so a Zipf-hot word concentrates load on one counter
     instance — the load-imbalance scenario family of ROADMAP open item 3.
+    ``state_per_tuple > 0`` gives the counter keyed state (its per-key
+    rolling windows) so migrations ship state proportional to key share.
     """
     return rolling_count_topology().with_groupings(
-        FieldsGrouping(edge=(1, 2), n_keys=n_keys, zipf_s=zipf_s)
+        FieldsGrouping(
+            edge=(1, 2), n_keys=n_keys, zipf_s=zipf_s,
+            state_per_tuple=state_per_tuple,
+        )
     )
 
 

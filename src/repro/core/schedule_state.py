@@ -300,6 +300,46 @@ class ScheduleState:
         self._met_load = None
         self._var_load = None
 
+    def evacuate_machines(self, dead: np.ndarray, rate: float) -> int:
+        """Relocate every instance hosted on a ``dead``-masked machine.
+
+        A hill climb scoring closed-form throughput cannot escape the
+        0-throughput plateau when *several* instances sit on a dead (or
+        draining) machine — no single move restores feasibility — so such
+        machines are drained greedily first: each stranded instance moves
+        to the feasible non-dead machine with the least chunk TCU (ties
+        toward most remaining head, ``_greedy_place``'s rule), and
+        ``refine`` polishes from there. Returns the number of relocations.
+        The same primitive serves machine *failure* (capacity already 0)
+        and planned *drain* (capacity-notice scale-in: pass the mask of
+        machines dead in the lookahead capacity).
+        """
+        from repro.core.maximize_throughput import _least_tcu_machine
+
+        dead = np.asarray(dead, dtype=bool)
+        if not dead.any():
+            return 0
+        cir = cost_model.component_rates(self.utg, rate)
+        per_inst = cir / self.n_instances
+        util = self.utilization(rate)
+        moves = 0
+        for c in range(self.utg.n_components):
+            tcu_w = self.e_cm[c] * per_inst[c] + self.met_cm[c]
+            for k, w in enumerate(self.assignment[c]):
+                if not dead[w]:
+                    continue
+                # Dead machines get -inf head so the shared rule never
+                # picks them; when nothing fits, least-overloaded alive.
+                head = np.where(dead, -np.inf, self.cluster.capacity - util - tcu_w)
+                target = _least_tcu_machine(tcu_w, head)
+                if target is None:
+                    target = int(np.argmax(head))
+                self.relocate_instance(c, k, target)
+                util[w] -= tcu_w[w]
+                util[target] += tcu_w[target]
+                moves += 1
+        return moves
+
     # ------------------------------------------------------ batch export
 
     def task_machine(self) -> np.ndarray:

@@ -25,10 +25,13 @@ from repro.runtime_stream.controller import (
 )
 from repro.runtime_stream.eval_jax import PolicyEvalResult, evaluate_policies_batch
 from repro.runtime_stream.executor import (
+    MigrationTransfer,
     RuntimeConfig,
     RuntimeResult,
     StreamExecutor,
     placement_migrations,
+    placement_transfer,
+    transfer_pause_windows,
 )
 from repro.runtime_stream.traces import (
     CompiledTrace,
@@ -36,8 +39,10 @@ from repro.runtime_stream.traces import (
     KeyedEdgeTrace,
     TraceSpec,
     burst_trace,
+    elastic_trace,
     failure_trace,
     key_skew_shift,
+    machine_addition,
     machine_removal,
     machine_slowdown,
     ramp_trace,
@@ -61,6 +66,7 @@ __all__ = [
     "rate_noise",
     "machine_slowdown",
     "machine_removal",
+    "machine_addition",
     "key_skew_shift",
     "ramp_trace",
     "burst_trace",
@@ -68,10 +74,14 @@ __all__ = [
     "slowdown_trace",
     "failure_trace",
     "skew_shift_trace",
+    "elastic_trace",
     "RuntimeConfig",
     "RuntimeResult",
     "StreamExecutor",
+    "MigrationTransfer",
     "placement_migrations",
+    "placement_transfer",
+    "transfer_pause_windows",
     "WindowObs",
     "OnlineController",
     "OracleRescheduler",

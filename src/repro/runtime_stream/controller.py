@@ -12,7 +12,11 @@ projected benefit clears a migration cost/benefit guard.
 Drift triggers (any of):
 
 * **capacity change** — the trace slowed or removed a machine since the
-  last plan;
+  last plan (reported as ``scale_out`` when a machine came *online* —
+  a ``machine_addition`` column switching on);
+* **drain notice** — a machine alive now is dead in the capacity
+  lookahead (``WindowObs.capacity_ahead``): migrate off it *before* the
+  capacity actually drops;
 * **saturation** — the spout throttle is pinned below 1 or queues sit
   above the watermark (offered load exceeds what the placement sustains);
 * **hot machine** — some alive machine's utilization crossed
@@ -20,10 +24,30 @@ Drift triggers (any of):
 
 Cost/benefit guard: the projected gain is the closed-form throughput
 improvement *capped by offered demand* (growing past what the trace offers
-buys nothing), integrated over ``horizon_windows``; the cost is the number
-of migrated/new instances times ``migration_cost`` tuples (state transfer
-plus the executor's migration pause). Plans that don't clear the guard are
-logged and skipped.
+buys nothing), integrated over ``horizon_windows``, **minus the service the
+migrated instances forgo while they sit in their migration pauses** (the
+two-sided accounting: a replan that wins 2%/window but idles half the
+pipeline for five windows is a loss at short horizons). The cost side is
+*state-aware*: restarting instances charge ``migration_cost`` tuples each,
+plus ``state_cost`` per keyed-state tuple they must ship
+(``placement_transfer`` — hot-key instances ship more state, and their
+longer transfer pauses also grow the forgone-service term through the
+executor's own ``transfer_pause_windows`` formula). Plans that don't clear
+the guard, or whose transfer cost exceeds ``elastic_budget``, are logged
+and skipped. ``state_aware=False`` reverts to the flat
+``moves × migration_cost`` pricing of earlier PRs — the state-blind
+baseline the runtime benchmark compares against.
+
+Elasticity: when the capacity grid *gains* a machine mid-trace
+(``machine_addition`` — a column switching on) the drift reason is
+``scale_out`` and the replan runs with the larger ``elastic_moves`` round
+budget so growth chains can reach the new machine in one control period.
+When the executor grants capacity notice
+(``RuntimeConfig.capacity_notice`` > 0), a machine that is alive now but
+dead in ``WindowObs.capacity_ahead`` triggers a ``drain``: the controller
+plans against the *future* capacity (minimum of now and ahead), migrating
+instances off the dying machine before its lease expires instead of
+losing them with it.
 
 ``provision_schedule`` builds the "honest operator" baseline the
 benchmarks freeze: Algorithm 1 + just enough Algorithm-2 growth to sustain
@@ -75,6 +99,13 @@ class WindowObs:
     # at every key_skew_shift boundary.
     skew: "cost_model.SkewModel | None" = None
     skew_epoch: int = 0
+    # Runtime config the executor runs under (pause/transfer-rate knobs the
+    # guard needs to price migration downtime); None keeps legacy callers
+    # working with flat defaults.
+    config: "object | None" = None
+    # (m,) capacity ``RuntimeConfig.capacity_notice`` windows ahead, or
+    # None when no notice is granted — the scale-in (drain) lookahead.
+    capacity_ahead: np.ndarray | None = None
 
 
 def provision_schedule(
@@ -124,9 +155,23 @@ class OnlineController:
       util_high: hot-machine trigger as a fraction of capacity.
       queue_high: queue-fraction trigger.
       migration_cost: tuples charged per migrated/new instance in the
-        guard (state transfer + restart downtime).
+        guard (restart downtime floor, state-independent).
       horizon_windows: windows the projected gain is assumed to persist
         (the guard's amortization horizon).
+      state_aware: price migrations by the keyed state they actually ship
+        (``placement_transfer`` with the observation's skew model) and
+        subtract state-transfer pause downtime from the projected gain.
+        ``False`` is the state-blind baseline: flat per-move pricing and
+        flat one-window pauses, exactly the pre-state cost model.
+      state_cost: guard tuples charged per state tuple shipped (the
+        network/recovery price of a unit of keyed state).
+      elastic_budget: hard cap on a single replan's transfer cost
+        (``moves × migration_cost + state_shipped × state_cost``); plans
+        above it are skipped regardless of benefit. ``inf`` disables.
+      elastic_moves: refine round budget for ``scale_out``/``drain``
+        replans (defaults to ``4 × max_moves``): growing onto a new
+        machine or vacating a dying one routinely needs longer move
+        chains than steady-state touch-ups.
       adaptive_growth: forward refine's depth-adaptive growth menu (lets a
         single replan grow a component past 4 instances when the closed
         form keeps improving — useful under fast rate ramps).
@@ -156,6 +201,10 @@ class OnlineController:
         adaptive_growth: bool = False,
         measure_noise: float = 0.0,
         noise_seed: int = 0,
+        state_aware: bool = True,
+        state_cost: float = 1.0,
+        elastic_budget: float = float("inf"),
+        elastic_moves: int | None = None,
     ):
         self.utg = utg
         self.cluster = cluster
@@ -168,6 +217,12 @@ class OnlineController:
         self.adaptive_growth = bool(adaptive_growth)
         self.measure_noise = float(measure_noise)
         self.noise_seed = int(noise_seed)
+        self.state_aware = bool(state_aware)
+        self.state_cost = float(state_cost)
+        self.elastic_budget = float(elastic_budget)
+        self.elastic_moves = (
+            4 * self.max_moves if elastic_moves is None else int(elastic_moves)
+        )
         self._cir_sum = float(cost_model.component_rates(utg, 1.0).sum())
         self._last_capacity: np.ndarray | None = None
         self._last_skew_epoch: int | None = None
@@ -199,7 +254,18 @@ class OnlineController:
         if self._last_capacity is not None and not np.array_equal(
             obs.capacity, self._last_capacity
         ):
+            if np.any((self._last_capacity <= 0.0) & (obs.capacity > 0.0)):
+                # A machine came online (machine_addition): elastic growth.
+                return "scale_out"
             return "capacity"
+        if obs.capacity_ahead is not None:
+            dying = (obs.capacity > 0.0) & (np.asarray(obs.capacity_ahead) <= 0.0)
+            if dying.any() and np.any(dying[obs.etg.task_machine()]):
+                # Capacity notice: a machine hosting instances disappears
+                # within the lookahead — drain it proactively instead of
+                # losing its instances (and their state) when the column
+                # actually drops.
+                return "drain"
         if self._last_skew_epoch is not None and (
             obs.skew_epoch != self._last_skew_epoch
         ):
@@ -225,66 +291,67 @@ class OnlineController:
     def _evacuate(etg: ExecutionGraph, cluster_t: Cluster, rate: float) -> ExecutionGraph:
         """Relocate every instance hosted on a capacity-0 machine.
 
-        A hill climb scoring closed-form throughput cannot escape the
-        0-throughput plateau when *several* instances sit on a dead
-        machine (no single move restores feasibility), so dead machines
-        are drained first: each stranded instance moves to the feasible
-        alive machine with the least chunk TCU (ties toward most
-        remaining head — ``_greedy_place``'s rule), and ``refine``
-        polishes from there.
+        Thin wrapper over ``ScheduleState.evacuate_machines`` (the shared
+        drain primitive): dead machines are drained greedily first because
+        a hill climb scoring closed-form throughput cannot escape the
+        0-throughput plateau when several instances sit on one, and
+        ``refine`` polishes from there. Draining a machine under capacity
+        notice is the same call against the lookahead capacity.
         """
-        from repro.core.maximize_throughput import _least_tcu_machine
-
-        state = ScheduleState.from_etg(etg, cluster_t)
         dead = cluster_t.capacity <= 0.0
         if not dead.any():
             return etg
-        cir = cost_model.component_rates(etg.utg, rate)
-        per_inst = cir / state.n_instances
-        util = state.utilization(rate)
-        for c in range(etg.utg.n_components):
-            tcu_w = state.e_cm[c] * per_inst[c] + state.met_cm[c]
-            for k, w in enumerate(state.assignment[c]):
-                if not dead[w]:
-                    continue
-                # Dead machines get -inf head so the shared rule never
-                # picks them; when nothing fits, least-overloaded alive.
-                head = np.where(dead, -np.inf, cluster_t.capacity - util - tcu_w)
-                target = _least_tcu_machine(tcu_w, head)
-                if target is None:
-                    target = int(np.argmax(head))
-                state.relocate_instance(c, k, target)
-                util[w] -= tcu_w[w]
-                util[target] += tcu_w[target]
+        state = ScheduleState.from_etg(etg, cluster_t)
+        state.evacuate_machines(dead, rate)
         return state.to_etg()
 
     # ----------------------------------------------------------- update
 
     def update(self, obs: WindowObs) -> ExecutionGraph | None:
         """Executor hook: returns a new placement or None to keep going."""
-        from repro.runtime_stream.executor import placement_migrations
+        from repro.runtime_stream.executor import (
+            RuntimeConfig,
+            placement_transfer,
+            transfer_pause_windows,
+        )
 
         reason = self._drifted(obs)
         self._last_capacity = obs.capacity.copy()
         self._last_skew_epoch = obs.skew_epoch
         if reason is None:
             return None
-        cluster_t = self.cluster.with_capacity(obs.capacity)
+        capacity = obs.capacity
+        if obs.capacity_ahead is not None:
+            # Plan against the *future* capacity whenever notice is
+            # granted: a machine dying within the lookahead looks dead to
+            # the planner, so the drain primitive vacates it (and no other
+            # trigger's replan migrates back onto it while the notice
+            # stands — that would be churn the removal immediately undoes).
+            capacity = np.minimum(obs.capacity, np.asarray(obs.capacity_ahead))
+        cluster_t = self.cluster.with_capacity(capacity)
         # Skew-aware scoring throughout: on keyed topologies both the
         # incumbent's worth and every replan candidate price per-instance
         # key shares, so a hot instance the even split cannot see is
         # exactly what the replan optimizes away.
         _, cur_thpt = cost_model.max_stable_rate(obs.etg, cluster_t, skew=obs.skew)
         base = self._evacuate(obs.etg, cluster_t, obs.offered_rate)
+        rounds = (
+            self.elastic_moves if reason in ("scale_out", "drain") else self.max_moves
+        )
         plan = refine(
             base,
             cluster_t,
-            max_rounds=self.max_moves,
+            max_rounds=rounds,
             adaptive_growth=self.adaptive_growth,
             skew=obs.skew,
         )
-        moved = placement_migrations(obs.etg, plan.etg)
-        if moved == 0:
+        # State-aware transfer pricing: which instances restart, and how
+        # much keyed state each ships. The blind baseline prices the same
+        # plan with skew=None — flat multiset moves, zero state.
+        transfer = placement_transfer(
+            obs.etg, plan.etg, skew=obs.skew if self.state_aware else None
+        )
+        if transfer.moves == 0:
             self.log.append((obs.window, f"{reason}:no_move"))
             return None
         # Gain only materializes up to what the trace offers; the window
@@ -293,14 +360,46 @@ class OnlineController:
         demand = obs.offered_rate * self._cir_sum
         gain_rate = min(plan.throughput, demand) - min(cur_thpt, demand)
         benefit = gain_rate * self.horizon_windows * obs.window_s
-        cost = moved * self.migration_cost
+        # Two-sided accounting: migrated instances serve nothing while
+        # paused, and hot-key instances pause longer (state transfer), so
+        # their forgone service comes off the projected gain — priced with
+        # the executor's own pause formula so guard and run agree.
+        cfg = obs.config if isinstance(obs.config, RuntimeConfig) else RuntimeConfig()
+        pauses = transfer_pause_windows(transfer, cfg, obs.window_s)
+        run_rate = min(obs.offered_rate, plan.rate)
+        inst_ir = cost_model.instance_rates(plan.etg, run_rate, skew=obs.skew)
+        pause_loss = float(
+            (pauses * obs.window_s * inst_ir)[transfer.migrated].sum()
+        )
+        benefit -= pause_loss
+        cost = (
+            transfer.moves * self.migration_cost
+            + transfer.state_shipped * self.state_cost
+        )
+        if cost > self.elastic_budget:
+            self.log.append(
+                (
+                    obs.window,
+                    f"{reason}:budget cost={cost:.0f} moves={transfer.moves} "
+                    f"state={transfer.state_shipped:.0f}",
+                )
+            )
+            return None
         if benefit <= cost:
             self.log.append(
-                (obs.window, f"{reason}:skip gain={gain_rate:.2f}/s moves={moved}")
+                (
+                    obs.window,
+                    f"{reason}:skip gain={gain_rate:.2f}/s moves={transfer.moves} "
+                    f"state={transfer.state_shipped:.0f}",
+                )
             )
             return None
         self.log.append(
-            (obs.window, f"{reason}:replan gain={gain_rate:.2f}/s moves={moved}")
+            (
+                obs.window,
+                f"{reason}:replan gain={gain_rate:.2f}/s moves={transfer.moves} "
+                f"state={transfer.state_shipped:.0f}",
+            )
         )
         return plan.etg
 
@@ -309,9 +408,16 @@ class OracleRescheduler:
     """Upper-bound baseline: a full ``schedule()`` re-run at every window.
 
     No drift detection, no cost/benefit guard — the benchmark's oracle
-    re-plans from scratch against every window's instantaneous capacity
-    (results are cached per capacity vector: ``schedule`` is deterministic
-    and rate-independent, so only capacity changes its output). Pair with
+    re-plans from scratch against every window's instantaneous capacity.
+    Results are cached per *(capacity vector, skew epoch)*: ``schedule``
+    is deterministic and rate-independent, but a ``key_skew_shift``
+    changes which placement is best on a keyed topology even though the
+    capacity grid is untouched — caching on capacity alone (the old bug)
+    served a plan tuned for dead hot keys for the rest of the trace, which
+    is how an "oracle" managed to lose to the online controller on keyed
+    rows. On keyed topologies the cached plan is also polished skew-aware
+    (``refine`` with the observation's skew model) so the oracle prices
+    realized key shares, not the even split. Pair with
     ``RuntimeConfig(migration_pause=0)`` for the idealized free-migration
     oracle the ISSUE acceptance compares the controller against.
     """
@@ -322,27 +428,56 @@ class OracleRescheduler:
         self.utg = utg
         self.cluster = cluster
         self.rate_epsilon = rate_epsilon
-        self._cache: dict[bytes, ExecutionGraph] = {}
+        self._cache: dict[tuple[bytes, int], ExecutionGraph] = {}
+
+    def _current_polished(
+        self, obs: WindowObs, alive: np.ndarray, sub: Cluster
+    ) -> "object":
+        """Skew-aware ``refine`` seeded from the *running* placement.
+
+        Instances stranded on dead machines are drained first via the
+        shared ``ScheduleState.evacuate_machines`` primitive, then machine
+        indices are remapped onto the alive subcluster.
+        """
+        cluster_t = self.cluster.with_capacity(obs.capacity)
+        etg = obs.etg
+        dead = obs.capacity <= 0.0
+        if dead[etg.task_machine()].any():
+            state = ScheduleState.from_etg(etg, cluster_t)
+            state.evacuate_machines(dead, obs.offered_rate)
+            etg = state.to_etg()
+        inv = np.full(obs.capacity.shape[0], -1, dtype=np.int64)
+        inv[alive] = np.arange(alive.size)
+        cur = ExecutionGraph(
+            utg=self.utg,
+            n_instances=etg.n_instances.copy(),
+            assignment=[inv[a] for a in etg.assignment],
+        )
+        return refine(cur, sub, skew=obs.skew)
 
     def update(self, obs: WindowObs) -> ExecutionGraph | None:
         from repro.core.maximize_throughput import schedule as _schedule
 
-        key = obs.capacity.tobytes()
+        key = (obs.capacity.tobytes(), obs.skew_epoch)
+        alive = np.flatnonzero(obs.capacity > 0.0)
+        if alive.size == 0:
+            return None
+        # Algorithm 1 assumes every machine is usable, so schedule on
+        # the alive subcluster and map machine indices back.
+        sub = Cluster(
+            machine_types=self.cluster.machine_types[alive],
+            capacity=obs.capacity[alive],
+            profile=self.cluster.profile,
+        )
         plan = self._cache.get(key)
         if plan is None:
-            # Algorithm 1 assumes every machine is usable, so schedule on
-            # the alive subcluster and map machine indices back.
-            alive = np.flatnonzero(obs.capacity > 0.0)
-            if alive.size == 0:
-                return None
-            sub = Cluster(
-                machine_types=self.cluster.machine_types[alive],
-                capacity=obs.capacity[alive],
-                profile=self.cluster.profile,
-            )
             sub_plan = _schedule(
                 self.utg, sub, r0=1.0, rate_epsilon=self.rate_epsilon
             ).etg
+            if obs.skew is not None:
+                # Skew-aware polish on the subcluster (key shares are
+                # machine-agnostic, so the skew model carries over as-is).
+                sub_plan = refine(sub_plan, sub, skew=obs.skew).etg
             plan = ExecutionGraph(
                 utg=self.utg,
                 n_instances=sub_plan.n_instances.copy(),
@@ -351,4 +486,34 @@ class OracleRescheduler:
             self._cache[key] = plan
         if plan.task_machine().tolist() == obs.etg.task_machine().tolist():
             return None
+        if obs.skew is not None:
+            # Transition window (the plan differs from what is running).
+            # Algorithm 1 sizes instances for the even split; under a
+            # realized skew its instance counts can hash the hot keys
+            # together — a local optimum ``refine`` cannot leave — and a
+            # *cached* plan can predate a better placement the executor
+            # has since reached. Seed a second polish from the running
+            # placement and keep whichever scores the higher skew-aware
+            # rate: a capacity or skew transition must never move the
+            # oracle onto a worse plan than the one it already executes.
+            # Steady-state windows short-circuit above, so this re-polish
+            # runs only on the handful of transition windows per trace.
+            polished = self._current_polished(obs, alive, sub)
+            plan_sub = ExecutionGraph(
+                utg=self.utg,
+                n_instances=plan.n_instances.copy(),
+                assignment=[
+                    np.searchsorted(alive, a) for a in plan.assignment
+                ],
+            )
+            plan_rate = refine(plan_sub, sub, max_rounds=0, skew=obs.skew).rate
+            if polished.rate > plan_rate:
+                plan = ExecutionGraph(
+                    utg=self.utg,
+                    n_instances=polished.etg.n_instances.copy(),
+                    assignment=[alive[a] for a in polished.etg.assignment],
+                )
+                self._cache[key] = plan
+            if plan.task_machine().tolist() == obs.etg.task_machine().tolist():
+                return None
         return plan

@@ -51,6 +51,28 @@ class PolicyEvalResult:
     throttle: np.ndarray
     machine_util_mean: np.ndarray  # (B, P, m) mean over windows
     sustained: np.ndarray          # (B, P)
+    window_s: float = 1.0          # trace dt, for the derived latency view
+
+    def latency(self) -> np.ndarray:
+        """(B, P, W) Little's-law end-to-end latency estimate per window —
+        the same derived view as ``RuntimeResult.latency`` (queued tuples
+        over drain rate, capped at the horizon), so batch sweeps and the
+        Python executor report one latency definition."""
+        horizon = self.throughput.shape[-1] * self.window_s
+        with np.errstate(divide="ignore", invalid="ignore"):
+            lat = np.where(
+                self.queue_total > 0.0,
+                self.queue_total / np.maximum(self.throughput, 1e-300),
+                0.0,
+            )
+        return np.minimum(lat, horizon)
+
+    def latency_slo_frac(self, slo_s: float, tail_frac: float = 0.5) -> np.ndarray:
+        """(B, P) fraction of trailing-``tail_frac`` windows within the
+        latency SLO — mirrors ``RuntimeResult.latency_slo_frac``."""
+        W = self.throughput.shape[-1]
+        start = int(W * (1.0 - tail_frac))
+        return (self.latency()[..., start:] <= slo_s).mean(axis=-1)
 
 
 def _validate(
@@ -181,7 +203,12 @@ def _evaluate_numpy(etg, cluster, traces, policies, config) -> PolicyEvalResult:
             out["throttle"][b, p] = res.throttle
             util[b, p] = res.machine_util.mean(axis=0)
             sustained[b, p] = res.sustained_throughput()
-    return PolicyEvalResult(machine_util_mean=util, sustained=sustained, **out)
+    return PolicyEvalResult(
+        machine_util_mean=util,
+        sustained=sustained,
+        window_s=traces[0].window_s,
+        **out,
+    )
 
 
 def _evaluate_jax(etg, cluster, traces, policies, config) -> PolicyEvalResult:
@@ -326,4 +353,5 @@ def _evaluate_jax(etg, cluster, traces, policies, config) -> PolicyEvalResult:
         throttle=wbp(thr),
         machine_util_mean=np.asarray(util).mean(axis=0),
         sustained=thpt[:, :, start:].mean(axis=2),
+        window_s=dt,
     )

@@ -30,13 +30,20 @@ agrees to ~1e-9 on shared scenarios (tested).
 
 A controller (see ``controller.py``) may swap the placement between
 windows; migrated/new instances pause for ``migration_pause`` windows
-(their queues hold but do not serve), modeling state-transfer downtime.
+(their queues hold but do not serve), modeling restart downtime. Keyed
+instances with operator state (``FieldsGrouping.state_per_tuple``)
+additionally pause for the time their state takes to ship at
+``state_transfer_rate`` — a hot-key instance pauses longer than a cold
+one (``placement_transfer`` is the single owner of the who-moves /
+how-much-state accounting the executor and the controller's cost/benefit
+guard share).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import math
 
 import numpy as np
 
@@ -46,7 +53,15 @@ from repro.core.profiles import Cluster
 
 from repro.runtime_stream.traces import CompiledTrace, TraceSpec
 
-__all__ = ["RuntimeConfig", "RuntimeResult", "StreamExecutor", "placement_migrations"]
+__all__ = [
+    "RuntimeConfig",
+    "RuntimeResult",
+    "StreamExecutor",
+    "MigrationTransfer",
+    "placement_migrations",
+    "placement_transfer",
+    "transfer_pause_windows",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +78,15 @@ class RuntimeConfig:
       throttle_min: floor so a saturated spout keeps probing.
       migration_pause: windows a migrated or newly added instance pauses
         (queues hold, no service) after a placement change.
+      state_transfer_rate: keyed-state tuples shippable per second while an
+        instance migrates; a migrated instance holding S state tuples
+        pauses ``migration_pause + ceil(S / (rate * window_s))`` windows.
+        The default (inf) makes state transfer instantaneous — the
+        state-blind runtime of earlier PRs, bit-identical.
+      capacity_notice: windows of advance notice the controller gets about
+        capacity changes (``WindowObs.capacity_ahead`` — cloud removals
+        are announced, e.g. spot-instance termination warnings). 0
+        disables the lookahead.
     """
 
     max_queue: float = 500.0
@@ -72,6 +96,8 @@ class RuntimeConfig:
     throttle_up: float = 1.25
     throttle_min: float = 0.05
     migration_pause: int = 1
+    state_transfer_rate: float = float("inf")
+    capacity_notice: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +135,28 @@ class RuntimeResult:
         start = int(self.n_windows * (1.0 - tail_frac))
         return float(self.throughput[start:].mean())
 
+    def latency(self) -> np.ndarray:
+        """(W,) per-window queueing-latency estimate in seconds: standing
+        backlog over the window's service rate (Little's law, L = λ·T).
+        Windows that serve nothing while holding backlog saturate at the
+        horizon length — "unboundedly late" without an inf in the stats.
+        Derived, not stored: fingerprints of earlier PRs stay valid."""
+        horizon = self.n_windows * self.window_s
+        with np.errstate(divide="ignore", invalid="ignore"):
+            lat = np.where(
+                self.queue_total > 0.0,
+                self.queue_total / np.maximum(self.throughput, 1e-300),
+                0.0,
+            )
+        return np.minimum(lat, horizon)
+
+    def latency_slo_frac(self, slo_s: float, tail_frac: float = 0.5) -> float:
+        """Fraction of the trailing ``tail_frac`` windows whose estimated
+        queueing latency meets ``slo_s`` — the latency-SLO column the
+        runtime benchmark records alongside sustained throughput."""
+        start = int(self.n_windows * (1.0 - tail_frac))
+        return float((self.latency()[start:] <= slo_s).mean())
+
     def fingerprint(self) -> str:
         """md5 over every metric array + the event log — two runs of the
         same seed/spec must produce equal fingerprints (bit-determinism)."""
@@ -130,7 +178,9 @@ def placement_migrations(old: ExecutionGraph, new: ExecutionGraph) -> int:
     Per component, instances on a machine are interchangeable, so the cost
     is the multiset difference of per-machine counts: ``sum_w max(0,
     new_cw - old_cw)`` — newly added instances and relocations both count
-    once; drops are free (a stopped instance ships no state).
+    once; drops are free (a stopped instance ships no state). This is the
+    flat *move count*; ``placement_transfer`` adds the state-weighted view
+    (which instances restart and how much keyed state each must load).
     """
     m = 1 + max(
         (int(a.max()) for a in old.assignment + new.assignment if a.size),
@@ -142,6 +192,105 @@ def placement_migrations(old: ExecutionGraph, new: ExecutionGraph) -> int:
         nc = np.bincount(new.assignment[c], minlength=m)
         total += int(np.clip(nc - oc, 0, None).sum())
     return total
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationTransfer:
+    """State-aware cost of turning one placement into another.
+
+    Attributes:
+      moves: instances that restart (start, move, or — for keyed
+        components whose instance count changed — rehash). Equals
+        ``placement_migrations`` on shuffle-only topologies.
+      state_shipped: total keyed state (state tuples) that must change
+        hosts before the new placement serves at full strength.
+      migrated: (T_new,) bool — per new-layout instance, does it restart.
+      instance_state: (T_new,) state tuples each restarting instance must
+        load (0 for carried-over instances and stateless components) —
+        the executor prices each instance's migration pause from this,
+        the controller guard the service lost while it sits paused.
+    """
+
+    moves: int
+    state_shipped: float
+    migrated: np.ndarray
+    instance_state: np.ndarray
+
+
+def placement_transfer(
+    old: ExecutionGraph, new: ExecutionGraph, skew=None
+) -> MigrationTransfer:
+    """State-weighted migration accounting (the cost model the controller
+    guard and the executor's pause mechanics share).
+
+    Shuffle components keep the multiset rule of ``placement_migrations``
+    (instances on a machine are interchangeable; the first ``old_cw``
+    instances a machine retains carry over, the rest restart) and ship no
+    state. Keyed components are *index-pinned* — the hash→instance map
+    routes key k to instance ``hash_k % N`` — so instance k restarts iff
+    its machine changed at index k; if the instance count changed, every
+    key rehashes and the whole component restarts and reships its state.
+    Each restarting instance loads the keyed state of the key share it
+    owns under the *new* realization (``SkewModel.instance_state``): hot
+    instances ship more. With ``skew=None`` the accounting is state-blind
+    and multiset everywhere — drops remain free in every mode.
+    """
+    m = 1 + max(
+        (int(a.max()) for a in old.assignment + new.assignment if a.size),
+        default=0,
+    )
+    offsets = new.component_offsets()
+    T_new = int(offsets[-1])
+    migrated = np.zeros(T_new, dtype=bool)
+    instance_state = np.zeros(T_new, dtype=np.float64)
+    keyed = set() if skew is None else set(skew.keyed_components)
+    moves = 0
+    for c in range(old.utg.n_components):
+        lo, hi = int(offsets[c]), int(offsets[c + 1])
+        if c in keyed:
+            n_old, n_new = int(old.n_instances[c]), int(new.n_instances[c])
+            state_vec = skew.instance_state(c, n_new)
+            if n_old != n_new:
+                # Resize rehashes every key: the whole component restarts
+                # and repartitions its state (Storm rebalance semantics).
+                mig = np.ones(n_new, dtype=bool)
+            else:
+                mig = np.asarray(old.assignment[c]) != np.asarray(new.assignment[c])
+            migrated[lo:hi] = mig
+            instance_state[lo:hi] = np.where(mig, state_vec, 0.0)
+            moves += int(mig.sum())
+        else:
+            keep = np.bincount(old.assignment[c], minlength=m)
+            for k, w in enumerate(new.assignment[c]):
+                if keep[w] > 0:
+                    keep[w] -= 1
+                else:
+                    migrated[lo + k] = True
+                    moves += 1
+    return MigrationTransfer(
+        moves=moves,
+        state_shipped=float(instance_state.sum()),
+        migrated=migrated,
+        instance_state=instance_state,
+    )
+
+
+def transfer_pause_windows(
+    transfer: MigrationTransfer, config: RuntimeConfig, window_s: float
+) -> np.ndarray:
+    """(T_new,) pause windows per new-layout instance: restarting
+    instances hold for ``migration_pause`` plus however long their keyed
+    state takes to ship at ``config.state_transfer_rate`` — the shared
+    formula behind the executor's pauses and the guard's lost-service
+    term (one copy, so the guard can never disagree with the run)."""
+    pause = np.where(transfer.migrated, config.migration_pause, 0).astype(np.int64)
+    rate = config.state_transfer_rate
+    if math.isfinite(rate) and rate > 0.0:
+        extra = np.ceil(transfer.instance_state / (rate * window_s))
+        pause = pause + np.where(
+            transfer.migrated, extra.astype(np.int64), 0
+        )
+    return pause
 
 
 class _Placement:
@@ -348,6 +497,7 @@ class StreamExecutor:
 
             # 4. Controller hook (takes effect from the next window).
             if controller is not None and (t + 1) % controller.period == 0 and t + 1 < W:
+                notice = cfg.capacity_notice
                 obs = WindowObs(
                     window=t,
                     window_s=dt,
@@ -361,15 +511,21 @@ class StreamExecutor:
                     throughput=float(throughput[t]),
                     skew=self.skew_model_at(t),
                     skew_epoch=tr.skew_epoch(t),
+                    config=cfg,
+                    capacity_ahead=(
+                        tr.capacity[min(t + notice, W - 1)] if notice > 0 else None
+                    ),
                 )
                 new_etg = controller.update(obs)
                 if new_etg is not None:
-                    moved = placement_migrations(place.etg, new_etg)
-                    place, backlog, pause = self._migrate(
-                        place, new_etg, backlog
+                    transfer = placement_transfer(
+                        place.etg, new_etg, skew=self.skew_model_at(t)
                     )
-                    migrations[t] = moved
-                    events.append((t, f"replan:{moved}moves"))
+                    place, backlog, pause = self._migrate(
+                        place, new_etg, backlog, transfer, t
+                    )
+                    migrations[t] = transfer.moves
+                    events.append((t, f"replan:{transfer.moves}moves"))
 
         return RuntimeResult(
             name=tr.name,
@@ -417,31 +573,40 @@ class StreamExecutor:
         )
 
     def _migrate(
-        self, place: _Placement, new_etg: ExecutionGraph, backlog: np.ndarray
+        self,
+        place: _Placement,
+        new_etg: ExecutionGraph,
+        backlog: np.ndarray,
+        transfer: MigrationTransfer,
+        window: int,
     ) -> tuple[_Placement, np.ndarray, np.ndarray]:
         """Swap the live placement.
 
-        Each component's total backlog redistributes evenly over its new
-        instances (shuffle regrouping on restart; keyed components rehash
-        in-flight tuples on restart, modeled as the same even re-split —
-        fresh arrivals re-route by key immediately). Instances beyond the
-        per-(component, machine) count carried over from the old placement
-        are new or moved and pause for ``migration_pause`` windows.
+        A shuffle component's total backlog redistributes evenly over its
+        new instances (shuffle regrouping on restart). A keyed component's
+        in-flight tuples re-route *by key*: its backlog redistributes by
+        the active realization's per-instance fractions
+        (``SkewModel.instance_fractions`` — the same blend of even shuffle
+        share and hash→instance key share every arrival uses), so a hot
+        instance's queue stays hot across a replan instead of being
+        laundered into an even split the routing immediately undoes.
+        Restarting instances (``transfer.migrated``) pause for
+        ``migration_pause`` windows plus their keyed state's transfer time
+        (``transfer_pause_windows``) — a hot-key instance pauses longer
+        than a cold one.
         """
         comp_backlog = self._component_backlog(place, backlog)
         new_place = _Placement(new_etg, self.cluster)
         new_backlog = (
             comp_backlog[new_place.comp] / new_place.n_inst[new_place.comp]
         )
-        pause = np.zeros(new_place.comp.shape[0], dtype=np.int64)
-        m = self.cluster.n_machines
-        pos = 0
-        for c in range(new_etg.utg.n_components):
-            keep = np.bincount(place.etg.assignment[c], minlength=m)
-            for w in new_etg.assignment[c]:
-                if keep[w] > 0:
-                    keep[w] -= 1
-                else:
-                    pause[pos] = self.config.migration_pause
-                pos += 1
+        skew = self.skew_model_at(window)
+        if skew is not None:
+            offsets = new_etg.component_offsets()
+            for c in skew.keyed_components:
+                lo, hi = int(offsets[c]), int(offsets[c + 1])
+                new_backlog[lo:hi] = comp_backlog[c] * skew.instance_fractions(
+                    c, hi - lo
+                )
+        pause = transfer_pause_windows(transfer, self.config, self.trace.window_s)
         return new_place, new_backlog, pause

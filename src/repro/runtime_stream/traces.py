@@ -37,6 +37,7 @@ __all__ = [
     "rate_noise",
     "machine_slowdown",
     "machine_removal",
+    "machine_addition",
     "key_skew_shift",
     "ramp_trace",
     "burst_trace",
@@ -44,6 +45,7 @@ __all__ = [
     "slowdown_trace",
     "failure_trace",
     "skew_shift_trace",
+    "elastic_trace",
 ]
 
 # Child-stream tag for key realizations: keyed randomness draws from
@@ -311,6 +313,42 @@ class machine_removal:
 
 
 @dataclasses.dataclass(frozen=True)
+class machine_addition:
+    """Machine ``machine`` joins the cluster at ``start`` (cloud scale-out).
+
+    The cluster passed to ``TraceSpec.compile`` is the *fleet* — every
+    machine that could ever serve, provisioned or not. An added machine's
+    capacity column is 0 before ``start`` (the dense grid gains a column
+    that switches on mid-trace) and its nominal capacity — or the
+    ``capacity`` override — on [start, end). ``end`` models a leased
+    machine returned to the provider. Pair with
+    ``RuntimeConfig(capacity_notice=...)`` so controllers can also *drain*
+    ahead of the lease expiring instead of losing the instances with it.
+    """
+
+    machine: int
+    start: int
+    end: int | None = None
+    capacity: float | None = None
+
+    def apply(self, rates: np.ndarray, capacity: np.ndarray, rng) -> list:
+        W = capacity.shape[0]
+        end = W if self.end is None else min(self.end, W)
+        val = (
+            float(self.capacity)
+            if self.capacity is not None
+            else float(capacity[min(self.start, W - 1), self.machine])
+        )
+        capacity[: self.start, self.machine] = 0.0
+        capacity[self.start : end, self.machine] = val
+        capacity[end:, self.machine] = 0.0
+        return [
+            (self.start, f"add m{self.machine}"),
+            *([(end, f"remove m{self.machine}")] if end < W else []),
+        ]
+
+
+@dataclasses.dataclass(frozen=True)
 class key_skew_shift:
     """Re-draw the key population of fields-grouped edges at ``start``.
 
@@ -498,6 +536,29 @@ def failure_trace(rate: float, machine: int, n_windows: int = 240) -> TraceSpec:
         n_windows=n_windows,
         base_rate=rate,
         events=(machine_removal(machine, start=n_windows // 3),),
+    )
+
+
+def elastic_trace(
+    lo_rate: float,
+    hi_rate: float,
+    machine: int,
+    n_windows: int = 240,
+    join: int | None = None,
+) -> TraceSpec:
+    """Cloud scale-out: the offered rate ramps past what the initial
+    machines sustain, and spare ``machine`` joins a third of the way in
+    (default) — only a controller that grows onto the new column rides the
+    ramp; a frozen schedule saturates at the old fleet's bound."""
+    join = n_windows // 3 if join is None else join
+    return TraceSpec(
+        name="elastic",
+        n_windows=n_windows,
+        base_rate=lo_rate,
+        events=(
+            rate_ramp(hi_rate, start=20, end=n_windows - 40),
+            machine_addition(machine, start=join),
+        ),
     )
 
 

@@ -1,0 +1,411 @@
+"""Stateful-elasticity tests (ISSUE 8).
+
+Covers the state-aware migration cost model end to end — keyed operator
+state on ``SkewModel``, ``placement_transfer``'s who-moves/how-much-state
+accounting, state-proportional transfer pauses in the executor — plus the
+elastic scale-out/drain machinery (``machine_addition``, capacity notice)
+and regressions for the three repaired runtime bugs:
+
+* the ``OracleRescheduler`` stale-plan cache (keyed on capacity only, so a
+  ``key_skew_shift`` left it serving a plan tuned for dead hot keys);
+* keyed backlog laundered into an even split on migration (contradicting
+  the hash→instance routing that refills the queues);
+* the one-sided cost/benefit guard (benefit ignored the service migrated
+  instances forgo while paused).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    keyed_rolling_count_topology,
+    linear_topology,
+    max_stable_rate,
+    paper_cluster,
+    schedule,
+)
+from repro.core.graph import ExecutionGraph, FieldsGrouping
+from repro.core.refine import refine
+from repro.runtime_stream import (
+    OnlineController,
+    OracleRescheduler,
+    RuntimeConfig,
+    StreamExecutor,
+    TraceSpec,
+    elastic_trace,
+    machine_addition,
+    placement_migrations,
+    placement_transfer,
+    provision_schedule,
+    ramp_trace,
+    rate_ramp,
+    skew_shift_trace,
+    transfer_pause_windows,
+)
+from repro.runtime_stream.executor import _Placement
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    return paper_cluster((1, 1, 1))
+
+
+@pytest.fixture(scope="module")
+def stateful_setup(cluster):
+    """Keyed topology with operator state + its schedule and skew view."""
+    utg = keyed_rolling_count_topology(n_keys=16, zipf_s=1.5, state_per_tuple=25.0)
+    etg = schedule(utg, cluster, r0=1.0, rate_epsilon=0.05).etg
+    probe = StreamExecutor(
+        etg, cluster, TraceSpec(name="probe", n_windows=2, base_rate=1.0), seed=5
+    )
+    skew = probe.skew_model_at(0)
+    return utg, etg, skew
+
+
+# ------------------------------------------------------- state model
+
+
+def test_state_per_tuple_validation():
+    with pytest.raises(ValueError, match="state_per_tuple"):
+        FieldsGrouping(edge=(0, 1), n_keys=4, state_per_tuple=-1.0)
+
+
+def test_state_monotone_in_key_share(stateful_setup):
+    """Instance state follows realized key share: the hot instance holds
+    the most state, shares and state sort identically, and the total is
+    invariant under the instance count (resharding moves state, never
+    creates it)."""
+    utg, etg, skew = stateful_setup
+    assert skew.has_state
+    (c,) = [k for k in skew.keyed_components if skew.instance_state(k, 2).any()]
+    total = skew.component_state()[c]
+    assert total > 0.0
+    for n in (2, 3, 5, 8):
+        state = skew.instance_state(c, n)
+        frac = skew.instance_fractions(c, n)
+        assert state.shape == (n,)
+        assert np.isclose(state.sum(), total)
+        # same ordering: more key share => more state
+        assert np.array_equal(np.argsort(state), np.argsort(frac))
+    # per-task view concatenates per-component vectors in task order
+    per_task = skew.per_task_state(etg.n_instances)
+    offsets = etg.component_offsets()
+    lo, hi = int(offsets[c]), int(offsets[c + 1])
+    assert np.allclose(
+        per_task[lo:hi], skew.instance_state(c, int(etg.n_instances[c]))
+    )
+
+
+def test_stateless_topologies_ship_no_state(cluster):
+    """state_per_tuple defaults to 0: the keyed topology without declared
+    state has no state surface, and every transfer ships zero."""
+    utg = keyed_rolling_count_topology(n_keys=16, zipf_s=1.5)
+    etg = schedule(utg, cluster, r0=1.0, rate_epsilon=0.05).etg
+    probe = StreamExecutor(
+        etg, cluster, TraceSpec(name="probe", n_windows=2, base_rate=1.0), seed=5
+    )
+    skew = probe.skew_model_at(0)
+    assert not skew.has_state
+    assert not skew.component_state().any()
+    assert not skew.per_task_state(etg.n_instances).any()
+    moved = refine(etg, cluster, max_rounds=2, skew=skew).etg
+    transfer = placement_transfer(etg, moved, skew=skew)
+    assert transfer.state_shipped == 0.0
+    assert not transfer.instance_state.any()
+
+
+def test_transfer_matches_flat_moves_on_shuffle(cluster):
+    """On shuffle-only topologies ``placement_transfer`` degenerates to
+    ``placement_migrations`` (multiset semantics, no state) — the
+    executor's migration metrics stay bit-identical to earlier PRs."""
+    topo = linear_topology()
+    etg = schedule(topo, cluster, r0=1.0, rate_epsilon=0.05).etg
+    for rounds in (1, 2, 4):
+        new = refine(etg, cluster, max_rounds=rounds).etg
+        transfer = placement_transfer(etg, new)
+        assert transfer.moves == placement_migrations(etg, new)
+        assert transfer.state_shipped == 0.0
+        assert transfer.migrated.sum() == transfer.moves
+
+
+def test_drop_is_free_and_resize_rehashes(cluster, stateful_setup):
+    """Shuffle drops ship nothing; a keyed-component resize rehashes every
+    key, so the whole component restarts and reships its full state."""
+    topo = linear_topology()
+    base = schedule(topo, cluster, r0=1.0, rate_epsilon=0.05).etg
+    # Shuffle drop: remove the last instance of a multi-instance component.
+    c = int(np.argmax(base.n_instances))
+    assert base.n_instances[c] >= 2
+    n2 = base.n_instances.copy()
+    n2[c] -= 1
+    dropped = ExecutionGraph(
+        utg=topo,
+        n_instances=n2,
+        assignment=[
+            a[:-1].copy() if i == c else a.copy()
+            for i, a in enumerate(base.assignment)
+        ],
+    )
+    assert placement_transfer(base, dropped).moves == 0
+    # Keyed resize: growing the stateful component restarts all of it.
+    utg, etg, skew = stateful_setup
+    (ck,) = [k for k in skew.keyed_components if skew.instance_state(k, 2).any()]
+    nk = etg.n_instances.copy()
+    nk[ck] += 1
+    grown = ExecutionGraph(
+        utg=utg,
+        n_instances=nk,
+        assignment=[
+            np.concatenate([a, a[-1:]]) if i == ck else a.copy()
+            for i, a in enumerate(etg.assignment)
+        ],
+    )
+    transfer = placement_transfer(etg, grown, skew=skew)
+    offsets = grown.component_offsets()
+    lo, hi = int(offsets[ck]), int(offsets[ck + 1])
+    assert transfer.migrated[lo:hi].all()
+    assert np.isclose(
+        transfer.instance_state[lo:hi].sum(), skew.component_state()[ck]
+    )
+
+
+def test_transfer_pause_scales_with_state(stateful_setup):
+    """A hot-key instance pauses longer: pause = migration_pause +
+    ceil(state / (rate · dt)); the default infinite transfer rate keeps
+    the legacy flat pause."""
+    utg, etg, skew = stateful_setup
+    (c,) = [k for k in skew.keyed_components if skew.instance_state(k, 2).any()]
+    new = refine(etg, cluster_f := paper_cluster((1, 1, 1)), max_rounds=3,
+                 skew=skew).etg
+    transfer = placement_transfer(etg, new, skew=skew)
+    flat = transfer_pause_windows(transfer, RuntimeConfig(), 1.0)
+    assert np.array_equal(flat, np.where(transfer.migrated, 1, 0))
+    cfg = RuntimeConfig(state_transfer_rate=10.0)
+    slow = transfer_pause_windows(transfer, cfg, 1.0)
+    expect = np.where(
+        transfer.migrated,
+        1 + np.ceil(transfer.instance_state / 10.0).astype(np.int64),
+        0,
+    )
+    assert np.array_equal(slow, expect)
+    if transfer.instance_state.any():
+        assert slow.max() > flat.max()
+
+
+# ----------------------------------------- keyed backlog redistribution
+
+
+def test_keyed_backlog_redistributes_by_share(cluster, stateful_setup):
+    """Bugfix regression: on migration a keyed component's in-flight
+    backlog re-splits by the realized key shares (the routing that refills
+    the queues), not the even split the old code used."""
+    utg, etg, skew = stateful_setup
+    ex = StreamExecutor(
+        etg, cluster, TraceSpec(name="probe", n_windows=2, base_rate=1.0), seed=5
+    )
+    (c,) = [k for k in skew.keyed_components if skew.instance_state(k, 2).any()]
+    assign = [a.copy() for a in etg.assignment]
+    assign[c][0] = (int(assign[c][0]) + 1) % cluster.n_machines
+    new_etg = ExecutionGraph(
+        utg=utg, n_instances=etg.n_instances.copy(), assignment=assign
+    )
+    place = _Placement(etg, cluster)
+    T = place.comp.shape[0]
+    backlog = np.linspace(1.0, 2.0, T)
+    transfer = placement_transfer(etg, new_etg, skew=skew)
+    new_place, new_backlog, pause = ex._migrate(
+        place, new_etg, backlog, transfer, window=0
+    )
+    offsets = new_etg.component_offsets()
+    lo, hi = int(offsets[c]), int(offsets[c + 1])
+    n = hi - lo
+    comp_total = backlog[place.comp == c].sum()
+    frac = skew.instance_fractions(c, n)
+    assert np.allclose(new_backlog[lo:hi], comp_total * frac)
+    assert not np.allclose(new_backlog[lo:hi], comp_total / n)
+    # shuffle components keep the exact even-split division
+    for cs in range(utg.n_components):
+        if cs in skew.keyed_components:
+            continue
+        ls, hs = int(offsets[cs]), int(offsets[cs + 1])
+        total = backlog[place.comp == cs].sum()
+        assert np.all(new_backlog[ls:hs] == total / (hs - ls))
+    # the relocated keyed instance pauses; untouched instances don't
+    assert pause[lo] > 0 and pause[lo + 1 : hi].sum() == 0
+
+
+# ------------------------------------------------- two-sided guard
+
+
+def test_guard_subtracts_paused_service(cluster, stateful_setup):
+    """Bugfix regression: the guard now charges the service migrated
+    instances forgo while paused. At a break-even point the one-sided
+    guard would replan through, long pauses + a short horizon flip the
+    decision to skip; with free restarts the same controller replans."""
+    utg, etg, skew = stateful_setup
+    r_even, _ = max_stable_rate(etg, cluster)
+    spec = TraceSpec(name="hotkeys", n_windows=160, base_rate=0.95 * r_even)
+    slow_cfg = RuntimeConfig(max_queue=120.0, migration_pause=40)
+    ctl = OnlineController(utg, cluster, period=10, horizon_windows=60)
+    res = StreamExecutor(etg, cluster, spec, seed=5, config=slow_cfg).run(
+        controller=ctl
+    )
+    assert res.migrations.sum() == 0
+    assert any("skip" in why for _, why in ctl.log)
+    fast_cfg = RuntimeConfig(max_queue=120.0, migration_pause=0)
+    ctl2 = OnlineController(utg, cluster, period=10, horizon_windows=60)
+    res2 = StreamExecutor(etg, cluster, spec, seed=5, config=fast_cfg).run(
+        controller=ctl2
+    )
+    assert res2.migrations.sum() > 0
+
+
+def test_guard_prices_state_and_budget(cluster, stateful_setup):
+    """State shows up in the guard's ledger (logged per decision), and
+    ``elastic_budget`` hard-caps a replan's transfer cost."""
+    utg, etg, skew = stateful_setup
+    r_even, _ = max_stable_rate(etg, cluster)
+    spec = TraceSpec(name="hotkeys", n_windows=120, base_rate=0.95 * r_even)
+    cfg = RuntimeConfig(max_queue=120.0, state_transfer_rate=50.0)
+    ctl = OnlineController(utg, cluster, period=10, elastic_budget=0.0)
+    res = StreamExecutor(etg, cluster, spec, seed=5, config=cfg).run(controller=ctl)
+    assert res.migrations.sum() == 0
+    assert any("budget" in why for _, why in ctl.log)
+    ctl2 = OnlineController(utg, cluster, period=10)
+    res2 = StreamExecutor(etg, cluster, spec, seed=5, config=cfg).run(
+        controller=ctl2
+    )
+    assert res2.migrations.sum() > 0
+    assert any("state=" in why for _, why in ctl2.log)
+
+
+# --------------------------------------------------- oracle cache fix
+
+
+def test_oracle_replans_after_skew_shift(cluster):
+    """Bugfix regression: the oracle's cache keys on (capacity, skew
+    epoch). A ``key_skew_shift`` leaves capacity untouched, but the
+    re-keyed oracle re-plans for the new hot keys instead of serving the
+    stale cached placement for the rest of the trace."""
+    utg = keyed_rolling_count_topology(n_keys=16, zipf_s=1.5)
+    etg = schedule(utg, cluster, r0=1.0, rate_epsilon=0.05).etg
+    spec = skew_shift_trace(1.0, n_windows=120)
+    shift_w = 40
+    oracle = OracleRescheduler(utg, cluster)
+    res = StreamExecutor(
+        etg, cluster, spec, seed=7, config=RuntimeConfig(migration_pause=0)
+    ).run(controller=oracle)
+    assert len(oracle._cache) == 2  # one plan per skew epoch
+    post = res.migrations[shift_w:]
+    assert post.sum() > 0  # the shift actually produced a replan
+
+
+# ------------------------------------------------- elastic scale-out/in
+
+
+def test_machine_addition_compiles_capacity_column(cluster):
+    utg = linear_topology()
+    fleet = paper_cluster((1, 1, 2))
+    spec = TraceSpec(
+        name="elastic",
+        n_windows=60,
+        base_rate=1.0,
+        events=(machine_addition(3, start=20, end=50),),
+    )
+    tr = spec.compile(fleet, seed=0, utg=utg)
+    assert np.all(tr.capacity[:20, 3] == 0.0)
+    assert np.all(tr.capacity[20:50, 3] == fleet.capacity[3])
+    assert np.all(tr.capacity[50:, 3] == 0.0)
+    assert (20, "add m3") in tr.events and (50, "remove m3") in tr.events
+
+
+def test_controller_scales_out_onto_added_machine():
+    """Tentpole acceptance: under a rate ramp past the initial fleet's
+    bound, the controller rides a ``machine_addition`` — scale_out drift
+    fires, the placement grows onto the new column, and online sustains
+    more than the frozen static schedule."""
+    topo = linear_topology()
+    init = paper_cluster((1, 1, 1))
+    fleet = paper_cluster((1, 1, 2))
+    r3 = refine(schedule(topo, init, r0=1.0, rate_epsilon=0.05).etg, init).rate
+    r4 = refine(schedule(topo, fleet, r0=1.0, rate_epsilon=0.05).etg, fleet).rate
+    # join after the ramp passes the 3-machine bound, so the scale_out
+    # replan's gain is immediate rather than demand-capped to zero
+    spec = elastic_trace(0.5 * r3, 1.05 * r4, machine=3, n_windows=200, join=120)
+    start = provision_schedule(topo, init, 0.5 * r3)
+    cfg = RuntimeConfig(max_queue=120.0)
+    static = StreamExecutor(start, fleet, spec, config=cfg).run()
+    ctl = OnlineController(topo, fleet, period=10)
+    online = StreamExecutor(start, fleet, spec, config=cfg).run(controller=ctl)
+    assert any(why.startswith("scale_out:replan") for _, why in ctl.log)
+    assert np.any(online.final_etg.task_machine() == 3)
+    assert online.sustained_throughput() > 1.1 * static.sustained_throughput()
+
+
+def test_controller_drains_before_machine_removal():
+    """Capacity notice: a leased machine's removal is announced
+    ``capacity_notice`` windows ahead; the controller drains it *before*
+    the column drops, so the removal window itself migrates nothing."""
+    topo = linear_topology()
+    init = paper_cluster((1, 1, 1))
+    fleet = paper_cluster((1, 1, 2))
+    r3 = refine(schedule(topo, init, r0=1.0, rate_epsilon=0.05).etg, init).rate
+    leave = 140
+    spec = TraceSpec(
+        name="lease",
+        n_windows=200,
+        base_rate=1.35 * r3,
+        events=(machine_addition(3, start=10, end=leave),),
+    )
+    start = provision_schedule(topo, init, 1.35 * r3)
+    cfg = RuntimeConfig(max_queue=120.0, capacity_notice=25)
+    ctl = OnlineController(topo, fleet, period=10)
+    online = StreamExecutor(start, fleet, spec, config=cfg).run(controller=ctl)
+    drains = [w for w, why in ctl.log if why.startswith("drain:replan")]
+    assert drains and max(drains) < leave
+    # drained proactively: nothing moves at/after the removal itself
+    assert online.migrations[leave - 1 : leave + 15].sum() == 0
+    assert np.all(online.final_etg.task_machine() != 3)
+
+
+# --------------------------------------------------------- latency view
+
+
+def test_latency_view_derived_and_slo(cluster):
+    """Latency is a derived view (fingerprints unchanged): zero when
+    queues are empty, capped at the horizon, and the SLO fraction is the
+    tail share of windows within the bound."""
+    topo = linear_topology()
+    full = refine(schedule(topo, cluster, r0=1.0, rate_epsilon=0.05).etg, cluster)
+    calm = StreamExecutor(
+        full.etg, cluster, TraceSpec(name="calm", n_windows=60, base_rate=0.3 * full.rate)
+    ).run()
+    lat = calm.latency()
+    assert lat.shape == (60,)
+    assert np.all(lat >= 0.0) and np.all(lat <= 60 * calm.window_s)
+    assert calm.latency_slo_frac(5.0) == 1.0
+    hot = StreamExecutor(
+        full.etg, cluster,
+        TraceSpec(name="hot", n_windows=120, base_rate=2.0 * full.rate),
+        config=RuntimeConfig(max_queue=120.0),
+    ).run()
+    assert hot.latency_slo_frac(0.5) < 1.0
+
+
+def test_eval_latency_matches_executor(cluster):
+    """PolicyEvalResult's derived latency agrees with the executor's on
+    the reference backend (same formula, same inputs)."""
+    from repro.runtime_stream import evaluate_policies_batch
+
+    topo = linear_topology()
+    full = refine(schedule(topo, cluster, r0=1.0, rate_epsilon=0.05).etg, cluster)
+    spec = ramp_trace(0.3 * full.rate, 1.4 * full.rate, n_windows=80)
+    tr = spec.compile(cluster, seed=2)
+    res = StreamExecutor(full.etg, cluster, tr).run()
+    batch = evaluate_policies_batch(
+        full.etg, cluster, [tr], full.etg.task_machine()[None, :], backend="numpy"
+    )
+    assert np.allclose(batch.latency()[0, 0], res.latency())
+    assert np.isclose(
+        batch.latency_slo_frac(5.0)[0, 0], res.latency_slo_frac(5.0)
+    )
