@@ -27,14 +27,23 @@ stateful keyed rows ship keyed operator state at a finite
 separates from the blind one.
 
 ``--check BENCH.json`` is the CI smoke gate: it fails unless every row
-has ``beats_static`` (online sustained >= static) and the recorded
-evaluator parity holds.
+has ``beats_static`` (online sustained >= static), every row's replan
+audit ledger is complete (accepted decisions == applied replans, full
+guard breakdown on every guard verdict), the recorded evaluator parity
+holds, and the observability overhead rows stay under 5%.
+
+``--trace-out PREFIX`` additionally runs one instrumented scenario with
+a ``repro.obs.TraceRecorder`` and writes ``PREFIX.jsonl`` +
+``PREFIX.trace.json`` (Chrome trace-event format — load in Perfetto);
+CI validates both with ``python -m repro.obs.validate`` and uploads them
+as artifacts.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import statistics
 import sys
 import time
 
@@ -42,6 +51,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core import linear_topology, paper_cluster, schedule
+from repro.obs import TraceRecorder, to_chrome_trace, to_jsonl
 from repro.core.graph import keyed_rolling_count_topology, rolling_count_topology
 from repro.core.refine import refine
 from repro.runtime_stream import (
@@ -197,11 +207,9 @@ def _keyed_scenarios(topo, cluster) -> list[tuple[TraceSpec, float, object, obje
     return rows
 
 
-def run_scenario(topo, spec: TraceSpec, provision_rate: float, cluster,
-                 config: RuntimeConfig) -> dict:
-    trace = spec.compile(cluster, seed=SEED, utg=topo)
-    # Provision against the machines alive at window 0 (an elastic fleet's
-    # spare column is off until its machine_addition fires).
+def _start_etg(topo, trace, provision_rate: float, cluster):
+    """Provision against the machines alive at window 0 (an elastic fleet's
+    spare column is off until its machine_addition fires)."""
     alive0 = trace.capacity[0] > 0.0
     prov_cluster = (
         cluster if alive0.all() else paper_cluster(
@@ -211,7 +219,29 @@ def run_scenario(topo, spec: TraceSpec, provision_rate: float, cluster,
             )
         )
     )
-    start_etg = provision_schedule(topo, prov_cluster, provision_rate)
+    return provision_schedule(topo, prov_cluster, provision_rate)
+
+
+def _ledger_complete(ctl: OnlineController, online) -> bool:
+    """Acceptance: every accepted AND rejected replan is in the audit
+    ledger with a full guard breakdown, and accepted decisions match the
+    replans the executor actually applied."""
+    guard = [d for d in ctl.ledger if d.has_guard_breakdown]
+    return bool(
+        len(ctl.ledger.accepted) == int((online.migrations > 0).sum())
+        and all(
+            d.moves > 0
+            and abs(d.cost - (d.move_cost + d.state_cost)) < 1e-9
+            and d.candidate_moves
+            for d in guard
+        )
+    )
+
+
+def run_scenario(topo, spec: TraceSpec, provision_rate: float, cluster,
+                 config: RuntimeConfig) -> dict:
+    trace = spec.compile(cluster, seed=SEED, utg=topo)
+    start_etg = _start_etg(topo, trace, provision_rate, cluster)
     oracle_config = ORACLE_CONFIG
 
     t0 = time.perf_counter()
@@ -251,6 +281,10 @@ def run_scenario(topo, spec: TraceSpec, provision_rate: float, cluster,
         "online_replans": int((online.migrations > 0).sum()),
         "oracle_migrations": int(oracle.migrations.sum()),
         "controller_log_tail": [f"w{w}:{msg}" for w, msg in ctl.log[-3:]],
+        "ledger_decisions": len(ctl.ledger),
+        "ledger_accepted": len(ctl.ledger.accepted),
+        "ledger_rejected": len(ctl.ledger.rejected),
+        "ledger_complete": _ledger_complete(ctl, online),
         "beats_static": bool(s_online >= s_static),
         "within_10pct_of_oracle": bool(s_online >= 0.9 * s_oracle),
         "static_s": round(t_static, 3),
@@ -282,6 +316,101 @@ def run_scenario(topo, spec: TraceSpec, provision_rate: float, cluster,
             # sustained numbers stay recorded for inspection.
             row["oracle_not_below_online"] = bool(s_oracle >= 0.99 * s_online)
     return row
+
+
+def overhead_rows(cluster) -> list[dict]:
+    """Recorder-on vs recorder-off CPU time on one shuffle and one keyed
+    scenario; ``--check`` gates at < 5%.
+
+    A single run is ~50-150 ms — the same order as scheduler jitter and
+    CPU-frequency drift on shared runners, so mean/median ratios flap by
+    several percent between invocations.  Off and on runs are therefore
+    interleaved one-by-one (drift slower than a run cancels out of each
+    sample's ratio of sums), timed with ``time.process_time_ns`` (immune
+    to preemption), and the reported overhead is the *minimum* sample
+    ratio — the least noise-contaminated measurement, as in min-of-N
+    timing.  The gate exists to catch gross instrumentation regressions
+    (per-window allocation in the hot loop, accidental always-on wall
+    probes); differences below the runner noise floor are not resolvable
+    and not what it polices."""
+    rows: list[dict] = []
+    keyed = keyed_rolling_count_topology(
+        n_keys=16, zipf_s=1.5, state_per_tuple=STATE_PER_TUPLE
+    )
+    for topo, scen_fn in ((linear_topology(), _scenarios),
+                          (keyed, _keyed_scenarios)):
+        spec, rate, clu, cfg = scen_fn(topo, cluster)[0]
+        trace = spec.compile(clu, seed=SEED, utg=topo)
+        start_etg = _start_etg(topo, trace, rate, clu)
+
+        def run_once(recorder=None) -> float:
+            ctl = OnlineController(topo, clu, period=10, recorder=recorder)
+            t0 = time.process_time_ns()
+            StreamExecutor(
+                start_etg, clu, trace, config=cfg, recorder=recorder
+            ).run(controller=ctl)
+            return (time.process_time_ns() - t0) / 1e9
+
+        def make_rec():
+            return TraceRecorder(
+                name=f"overhead-{trace.name}", wall_clock=True
+            )
+
+        run_once()  # warm-up: imports, caches, first-touch allocations
+        rec = make_rec()
+        run_once(rec)
+        ratios: list[float] = []
+        off_times: list[float] = []
+        on_times: list[float] = []
+        for _ in range(7):
+            t_off = t_on = 0.0
+            for _ in range(4):  # interleave singles within the sample
+                t_off += run_once()
+                rec = make_rec()
+                t_on += run_once(rec)
+            off_times.append(t_off / 4)
+            on_times.append(t_on / 4)
+            ratios.append(t_on / max(t_off, 1e-12))
+        off = statistics.median(off_times)
+        on = statistics.median(on_times)
+        frac = min(ratios) - 1.0
+        rows.append(
+            {
+                "scenario": trace.name,
+                "recorder_off_s": round(off, 4),
+                "recorder_on_s": round(on, 4),
+                "overhead_pct": round(100.0 * frac, 2),
+                "within_5pct": bool(frac < 0.05),
+                "records": len(rec.records),
+            }
+        )
+    return rows
+
+
+def export_demo_trace(prefix: str, cluster=None) -> tuple[str, str]:
+    """One instrumented controller run exported for the CI artifacts.
+
+    Writes ``<prefix>.jsonl`` and ``<prefix>.trace.json`` (Chrome
+    trace-event format — open https://ui.perfetto.dev and drag the file
+    in); returns the two paths.
+    """
+    cluster = cluster if cluster is not None else paper_cluster((1, 1, 1))
+    topo = linear_topology()
+    spec, rate, clu, cfg = _scenarios(topo, cluster)[0]
+    trace = spec.compile(clu, seed=SEED, utg=topo)
+    start_etg = _start_etg(topo, trace, rate, clu)
+    rec = TraceRecorder(name=f"bench_runtime_{trace.name}", wall_clock=True)
+    ctl = OnlineController(topo, clu, period=10, recorder=rec)
+    StreamExecutor(start_etg, clu, trace, config=cfg, recorder=rec).run(
+        controller=ctl
+    )
+    jsonl_path = f"{prefix}.jsonl"
+    chrome_path = f"{prefix}.trace.json"
+    to_jsonl(rec, path=jsonl_path)
+    to_chrome_trace(rec, path=chrome_path)
+    print(f"trace export: {jsonl_path} ({len(rec.records)} records), "
+          f"{chrome_path} (Perfetto-loadable)")
+    return jsonl_path, chrome_path
 
 
 def parity_smoke(topo, cluster) -> dict:
@@ -317,9 +446,10 @@ def parity_smoke(topo, cluster) -> dict:
 
 
 def check(json_path: str) -> int:
-    """CI smoke gate: every recorded row must have online >= static, the
-    keyed ablation rows must not lose to the blind controller, and the
-    evaluator parity must hold."""
+    """CI smoke gate: every recorded row must have online >= static, a
+    complete replan audit ledger, the keyed ablation rows must not lose
+    to the blind controller, the evaluator parity must hold, and the
+    recorder overhead rows must stay under 5%."""
     with open(json_path) as f:
         data = json.load(f)
     bad: list[str] = []
@@ -328,6 +458,8 @@ def check(json_path: str) -> int:
             tag = f"{topo_name}/{row['scenario']}"
             if not row.get("beats_static", False):
                 bad.append(f"{tag}: online < static")
+            if not row.get("ledger_complete", False):
+                bad.append(f"{tag}: replan audit ledger incomplete")
             if "aware_beats_blind" in row and not row["aware_beats_blind"]:
                 bad.append(f"{tag}: state-aware < state-blind")
             if "oracle_not_below_online" in row and not row["oracle_not_below_online"]:
@@ -335,17 +467,27 @@ def check(json_path: str) -> int:
     parity = data.get("parity", {})
     if parity.get("jax_available") and not parity.get("within_1e9", False):
         bad.append("parity: JAX evaluator drifted past 1e-9")
+    overhead = data.get("overhead", [])
+    if not overhead:
+        bad.append("overhead: recorder overhead rows missing")
+    for row in overhead:
+        if not row.get("within_5pct", False):
+            bad.append(
+                f"overhead/{row['scenario']}: recorder overhead "
+                f"{row.get('overhead_pct')}% >= 5%"
+            )
     if bad:
         for line in bad:
             print(f"runtime check FAILED: {line}")
         return 1
     n = sum(len(rows) for rows in data["scenarios"].values())
     print(f"runtime check ok: {n} rows, online >= static on all, "
-          "keyed ablation and parity hold")
+          "ledgers complete, keyed ablation, parity and recorder "
+          "overhead hold")
     return 0
 
 
-def main(json_path: str | None = None) -> None:
+def main(json_path: str | None = None, trace_out: str | None = None) -> None:
     cluster = paper_cluster((1, 1, 1))
     results = {}
     for topo_name, topo, scen_fn in (
@@ -385,9 +527,24 @@ def main(json_path: str | None = None) -> None:
         f"jax={parity['jax_available']};max_diff={parity['max_abs_throughput_diff']:.2e};"
         f"within_1e9={parity['within_1e9']}",
     )
+    overhead = overhead_rows(cluster)
+    for row in overhead:
+        emit(
+            f"runtime_obs_overhead_{row['scenario']}",
+            row["recorder_on_s"] * 1e6,
+            f"off={row['recorder_off_s']}s;on={row['recorder_on_s']}s;"
+            f"overhead={row['overhead_pct']}%;within_5pct={row['within_5pct']};"
+            f"records={row['records']}",
+        )
+    if trace_out:
+        export_demo_trace(trace_out, cluster)
     if json_path:
         with open(json_path, "w") as f:
-            json.dump({"scenarios": results, "parity": parity}, f, indent=2)
+            json.dump(
+                {"scenarios": results, "parity": parity, "overhead": overhead},
+                f,
+                indent=2,
+            )
             f.write("\n")
 
 
@@ -396,7 +553,11 @@ if __name__ == "__main__":
     parser.add_argument("--json", default=None, help="write BENCH_runtime.json here")
     parser.add_argument("--check", default=None, metavar="JSON",
                         help="validate a recorded BENCH_runtime.json and exit")
+    parser.add_argument(
+        "--trace-out", default=None, metavar="PREFIX",
+        help="export one instrumented run as PREFIX.jsonl + PREFIX.trace.json",
+    )
     args = parser.parse_args()
     if args.check:
         sys.exit(check(args.check))
-    main(json_path=args.json)
+    main(json_path=args.json, trace_out=args.trace_out)

@@ -10,6 +10,13 @@ controller (incremental refine-move replans behind a migration guard),
 and an oracle that re-runs the full scheduler every window with free
 migrations. A final section shares the cluster between several tenants
 (weighted max-min fairness + the shared multi-tenant runtime).
+
+The online run is instrumented with ``repro.obs.TraceRecorder``: the
+controller's replan audit ledger drives the decision log below, and the
+run's trace is exported as ``runtime_demo_trace.jsonl`` plus
+``runtime_demo_trace.trace.json`` (Chrome trace-event format — open
+https://ui.perfetto.dev and drag the file in to see the executor windows,
+controller spans and closed-form dispatch decisions on a timeline).
 """
 
 import numpy as np
@@ -22,6 +29,7 @@ from repro.core import (
     schedule,
 )
 from repro.core.refine import refine
+from repro.obs import TraceRecorder, summary, to_chrome_trace, to_jsonl
 from repro.multitenant import (
     MultiTenantRuntime,
     Tenant,
@@ -63,8 +71,11 @@ def main() -> None:
           f"instances={start.n_instances.tolist()}")
 
     static = StreamExecutor(start, cluster, spec).run()
-    ctl = OnlineController(topo, cluster, period=10)
-    online = StreamExecutor(start, cluster, spec).run(controller=ctl)
+    recorder = TraceRecorder(name="runtime_demo", wall_clock=True)
+    ctl = OnlineController(topo, cluster, period=10, recorder=recorder)
+    online = StreamExecutor(start, cluster, spec, recorder=recorder).run(
+        controller=ctl
+    )
     oracle = StreamExecutor(
         start, cluster, spec, config=RuntimeConfig(migration_pause=0)
     ).run(controller=OracleRescheduler(topo, cluster))
@@ -76,15 +87,27 @@ def main() -> None:
     print(f"  oracle   {oracle.sustained_throughput():7.2f} tuples/s "
           f"({int(oracle.migrations.sum())} migrations)")
 
-    print("\ncontroller decisions:")
-    for window, msg in ctl.log:
-        print(f"  window {window:3d}: {msg}")
+    print("\ncontroller decisions (replan audit ledger):")
+    for dec in ctl.ledger:
+        print(f"  window {dec.window:3d}: {dec.message}")
+    accepted = ctl.ledger.accepted
+    print(f"  {len(accepted)} accepted / "
+          f"{len(ctl.ledger) - len(accepted)} rejected or deferred")
 
     print(f"\nfinal online schedule: "
           f"instances={online.final_etg.n_instances.tolist()}")
     quarters = np.array_split(online.throughput, 4)
     means = " -> ".join(f"{q.mean():.1f}" for q in quarters)
     print(f"online throughput by quarter: {means} tuples/s")
+
+    print("\n--- observability (repro.obs) ---")
+    print(summary(recorder))
+    to_jsonl(recorder, "runtime_demo_trace.jsonl")
+    to_chrome_trace(recorder, "runtime_demo_trace.trace.json")
+    print("trace exported: runtime_demo_trace.jsonl and "
+          "runtime_demo_trace.trace.json")
+    print("open https://ui.perfetto.dev and drag the .trace.json in to "
+          "browse the run")
 
     keyed_demo(cluster)
     multitenant_demo()

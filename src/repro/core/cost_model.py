@@ -429,7 +429,11 @@ def max_stable_rate_batch(
             raise ValueError("task_machine must be (B, T)")
         if (
             resolve_closed_form_backend(
-                backend, task_machine.size, regime="skew", n_machines=n_machines
+                backend,
+                task_machine.size,
+                regime="skew",
+                n_machines=n_machines,
+                site="max_stable_rate_batch",
             )
             == "jax"
         ):
@@ -459,6 +463,7 @@ def max_stable_rate_batch(
             task_machine.size,
             regime="per_row" if n_instances is not None else "shared",
             n_machines=n_machines,
+            site="max_stable_rate_batch",
         )
         == "jax"
     ):

@@ -93,6 +93,7 @@ def refine(
     lockstep: bool = True,
     adaptive_growth: bool = False,
     skew: "cost_model.SkewModel | None" = None,
+    recorder=None,
 ) -> RefineResult:
     """Hill-climb refinement of ``etg``'s placement (and instance counts).
 
@@ -130,19 +131,45 @@ def refine(
         bound instead of the eq. 6 even split, so growth offers on a
         component whose instances are skew-saturated cannot report
         even-split gains. State engine only; forces NumPy scoring.
+      recorder: optional ``repro.obs.TraceRecorder``. When enabled, the
+        climb runs under a ``refine`` span with one ``refine.round`` span
+        per applied move (state engine), and the recorder is *activated*
+        for the duration so every closed-form backend resolution during
+        scoring lands in its dispatch log. ``None`` (or a
+        ``NullRecorder``) adds no work to the climb.
     """
+    rec = recorder if recorder is not None and recorder.enabled else None
     if engine == "state":
-        return _refine_state(
-            etg, cluster, max_rounds, tol, allow_add, backend, lockstep,
-            adaptive_growth, skew,
-        )
+        if rec is None:
+            return _refine_state(
+                etg, cluster, max_rounds, tol, allow_add, backend, lockstep,
+                adaptive_growth, skew,
+            )
+        with rec.activate(), rec.span(
+            "refine", cat="refine", engine=engine, backend=backend
+        ) as sp:
+            result = _refine_state(
+                etg, cluster, max_rounds, tol, allow_add, backend, lockstep,
+                adaptive_growth, skew, recorder=rec,
+            )
+            sp["args"]["applied_moves"] = len(result.moves)
+            sp["args"]["throughput"] = float(result.throughput)
+        return result
     if engine != "reference":
         raise ValueError(f"unknown engine {engine!r}; use 'state' or 'reference'")
     if adaptive_growth:
         raise ValueError("adaptive_growth requires engine='state'")
     if skew is not None:
         raise ValueError("skew requires engine='state'")
-    return _refine_reference(etg, cluster, max_rounds, tol, allow_add)
+    if rec is None:
+        return _refine_reference(etg, cluster, max_rounds, tol, allow_add)
+    with rec.activate(), rec.span(
+        "refine", cat="refine", engine=engine, backend=backend
+    ) as sp:
+        result = _refine_reference(etg, cluster, max_rounds, tol, allow_add)
+        sp["args"]["applied_moves"] = len(result.moves)
+        sp["args"]["throughput"] = float(result.throughput)
+    return result
 
 
 # --------------------------------------------------------------- reference
@@ -565,6 +592,7 @@ def _refine_state(
     lockstep: bool = True,
     adaptive_growth: bool = False,
     skew=None,
+    recorder=None,
 ) -> RefineResult:
     """Incremental-engine hill climb: identical decisions, batched scoring.
 
@@ -594,7 +622,14 @@ def _refine_state(
     m = cluster.n_machines
     n = state.utg.n_components
 
-    for _ in range(max_rounds):
+    for round_idx in range(max_rounds):
+        # Per-round profiling span (opened/closed manually so the
+        # convergence `break` below can close it without reindenting the
+        # whole round body under a `with`).
+        round_span = sp = None
+        if recorder is not None:
+            round_span = recorder.span("refine.round", cat="refine", round=round_idx)
+            sp = round_span.__enter__()
         best_move: tuple[float, str, "function"] | None = None
 
         def offer(score: float, desc: str, apply_fn) -> None:
@@ -774,10 +809,17 @@ def _refine_state(
                     )
 
         if best_move is None:
+            if round_span is not None:
+                sp["args"]["move"] = None
+                round_span.__exit__(None, None, None)
             break
         best, desc, apply_fn = best_move
         apply_fn()
         moves.append(desc)
+        if round_span is not None:
+            sp["args"]["move"] = desc
+            sp["args"]["score"] = float(best)
+            round_span.__exit__(None, None, None)
 
     final = state.to_etg()
     rate, thpt = max_stable_rate(final, cluster, skew=skew)

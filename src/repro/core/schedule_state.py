@@ -440,6 +440,7 @@ class ScheduleState:
                     task_machine.size,
                     regime="skew",
                     n_machines=n_machines,
+                    site="score_task_machine_batch",
                 )
                 == "jax"
             ):
@@ -479,6 +480,7 @@ class ScheduleState:
                 task_machine.size,
                 regime="per_row" if n_inst.ndim == 2 else "shared",
                 n_machines=n_machines,
+                site="score_task_machine_batch",
             )
             == "jax"
         ):

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core.graph import ExecutionGraph
 from repro.core.profiles import Cluster
+from repro.obs.trace import record_dispatch
 
 __all__ = ["SimResult", "simulate", "simulate_batch", "measured_tcu"]
 
@@ -189,6 +190,7 @@ def resolve_closed_form_backend(
     elements: int | None = None,
     regime: str = "shared",
     n_machines: int | None = None,
+    site: str | None = None,
 ) -> str:
     """Validate + resolve a closed-form scoring backend request.
 
@@ -211,7 +213,10 @@ def resolve_closed_form_backend(
         one-hot does B*T*m work, so wide clusters and out-of-cache sweeps
         stay NumPy). ``None`` skips the gates; internal scoring call sites
         always pass it.
+      site: caller label recorded in the observability dispatch log
+        (``repro.obs``); no effect on resolution.
     """
+    requested = backend
     if backend not in ("numpy", "jax", "auto"):
         raise ValueError(f"unknown backend {backend!r}")
     if backend == "auto":
@@ -229,7 +234,11 @@ def resolve_closed_form_backend(
                 )
             )
             backend = "jax" if gate_ok and elements >= threshold else "numpy"
-    return "jax" if backend == "jax" and _jax_available() else "numpy"
+    resolved = "jax" if backend == "jax" and _jax_available() else "numpy"
+    # Auditability of the auto-dispatch gates: when a TraceRecorder is
+    # active, every resolution lands in its dispatch log (no-op otherwise).
+    record_dispatch(requested, resolved, regime, elements, n_machines, site)
+    return resolved
 
 
 # Batches at least this large amortize JAX dispatch/compile overhead on the

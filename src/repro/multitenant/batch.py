@@ -211,6 +211,7 @@ class TenantBatchScorer:
             tm.size,
             regime="skew" if self._has_skew else "per_row",
             n_machines=capacity.shape[-1],
+            site="tenant_batch",
         )
         if resolved == "jax":
             from repro.core.sim_jax import closed_form_rates_jax

@@ -27,6 +27,8 @@ import numpy as np
 
 from repro.core.profiles import Cluster
 from repro.core.schedule_state import ScheduleState
+from repro.obs.ledger import ReplanDecision
+from repro.obs.trace import NULL_RECORDER
 
 from repro.runtime_stream.controller import OnlineController
 from repro.runtime_stream.executor import (
@@ -44,6 +46,7 @@ __all__ = [
     "MultiTenantTrace",
     "compile_tenant_traces",
     "ReplanArbiter",
+    "TenantArbiterLedger",
     "MultiTenantRuntime",
     "MultiTenantRuntimeResult",
 ]
@@ -121,6 +124,24 @@ def compile_tenant_traces(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class TenantArbiterLedger:
+    """One tenant's view of the shared ``ReplanArbiter`` ledger.
+
+    ``budget_remaining`` lists, per control period the tenant actually
+    requested admission in, the moves left of its ``moves_per_period``
+    budget after all admissions in that period.
+    """
+
+    name: str
+    grants: int
+    denials: int
+    moves_admitted: int
+    moves_denied: int
+    moves_per_period: int
+    budget_remaining: tuple[tuple[int, int], ...]  # (period index, moves left)
+
+
 class ReplanArbiter:
     """Shared migration-budget ledger across tenants' controllers.
 
@@ -130,8 +151,9 @@ class ReplanArbiter:
     construction, not by scheduling order.
     """
 
-    def __init__(self, moves_per_period: int = 8):
+    def __init__(self, moves_per_period: int = 8, recorder=None):
         self.moves_per_period = int(moves_per_period)
+        self.recorder = NULL_RECORDER if recorder is None else recorder
         self._used: dict[tuple[str, int], int] = {}
         self.log: list[tuple[str, int, int, bool]] = []  # (tenant, window, moves, admitted)
 
@@ -142,7 +164,46 @@ class ReplanArbiter:
         if ok:
             self._used[bucket] = used + moves
         self.log.append((tenant, int(window), int(moves), ok))
+        rec = self.recorder
+        if rec.enabled:
+            rec.metrics.counter(
+                "arbiter.grants" if ok else "arbiter.denials"
+            ).add(1)
+            rec.event(
+                "arbiter_grant" if ok else "arbiter_denial",
+                cat="arbiter",
+                tenant=tenant,
+                moves=int(moves),
+                remaining=self.moves_per_period - self._used.get(bucket, used),
+            )
         return ok
+
+    def tenant_summary(self, tenant: str) -> TenantArbiterLedger:
+        """Roll this tenant's ledger rows up into a ``TenantArbiterLedger``."""
+        grants = denials = admitted = denied = 0
+        for name, _w, moves, ok in self.log:
+            if name != tenant:
+                continue
+            if ok:
+                grants += 1
+                admitted += moves
+            else:
+                denials += 1
+                denied += moves
+        remaining = tuple(
+            (period, self.moves_per_period - used)
+            for (name, period), used in sorted(self._used.items())
+            if name == tenant
+        )
+        return TenantArbiterLedger(
+            name=tenant,
+            grants=grants,
+            denials=denials,
+            moves_admitted=admitted,
+            moves_denied=denied,
+            moves_per_period=self.moves_per_period,
+            budget_remaining=remaining,
+        )
 
 
 class _ArbitratedController:
@@ -164,7 +225,20 @@ class _ArbitratedController:
         moves = placement_migrations(obs.etg, plan)
         if self.arbiter.admit(self.name, obs.window, self.period, moves):
             return plan
-        self.inner.log.append((obs.window, "deferred:arbiter", float(moves)))
+        # The inner controller just accepted a replan (outcome="replan" in
+        # its ledger) that the arbiter now denies: record the denial as a
+        # structured "deferred" decision — its legacy entry reproduces the
+        # historical in-band (window, "deferred:arbiter", moves) 3-tuple.
+        last = self.inner.ledger[-1] if self.inner.ledger else None
+        self.inner._decide(
+            ReplanDecision(
+                window=obs.window,
+                trigger=last.trigger if last is not None else "arbiter",
+                outcome="deferred",
+                moves=int(moves),
+                candidate_moves=last.candidate_moves if last is not None else (),
+            )
+        )
         return None
 
 
@@ -176,9 +250,15 @@ class MultiTenantRuntimeResult:
     results: tuple[RuntimeResult, ...]
     satisfaction: np.ndarray  # (N,) tail admitted rate / target rate
     arbiter_log: tuple[tuple[str, int, int, bool], ...]
+    # Per-tenant arbiter roll-ups (grants, denials, budget remaining per
+    # period), aligned with ``names``; empty when run offline.
+    arbiter: tuple[TenantArbiterLedger, ...] = ()
 
     def result_for(self, name: str) -> RuntimeResult:
         return self.results[self.names.index(name)]
+
+    def arbiter_for(self, name: str) -> TenantArbiterLedger:
+        return self.arbiter[self.names.index(name)]
 
 
 class MultiTenantRuntime:
@@ -233,16 +313,24 @@ class MultiTenantRuntime:
         online: bool = True,
         moves_per_period: int = 8,
         controller_kwargs: "dict | None" = None,
+        recorder=None,
     ) -> MultiTenantRuntimeResult:
         """Execute all tenants' windows; returns per-tenant results.
 
         With ``online=True`` each tenant gets an ``OnlineController`` on
         its residual capacity view, wrapped by one shared ``ReplanArbiter``
         so drift replans cannot starve co-tenants of migration bandwidth.
+
+        A ``repro.obs.TraceRecorder`` passed as ``recorder`` is shared by
+        every tenant's executor, controller and the arbiter: each tenant's
+        run nests under a ``tenant:<name>`` span, and the per-tenant
+        arbiter roll-ups land on the result's ``arbiter`` field either
+        way.
         """
+        rec = NULL_RECORDER if recorder is None else recorder
         loads = self.planned_loads()
         total = loads.sum(axis=0)  # (W, m)
-        arbiter = ReplanArbiter(moves_per_period)
+        arbiter = ReplanArbiter(moves_per_period, recorder=rec)
         results = []
         sat = np.zeros(len(self.tenants), dtype=np.float64)
         for i, (tenant, alloc) in enumerate(zip(self.tenants, self.plan.allocations)):
@@ -253,14 +341,19 @@ class MultiTenantRuntime:
                 self.mtrace.traces[i],
                 config=self.config,
                 background_load=bg,
+                recorder=rec if rec.enabled else None,
             )
             controller = None
             if online:
                 inner = OnlineController(
-                    tenant.utg, self.cluster, **(controller_kwargs or {})
+                    tenant.utg,
+                    self.cluster,
+                    recorder=rec if rec.enabled else None,
+                    **(controller_kwargs or {}),
                 )
                 controller = _ArbitratedController(tenant.name, inner, arbiter)
-            res = executor.run(controller=controller)
+            with rec.span(f"tenant:{tenant.name}", cat="tenant"):
+                res = executor.run(controller=controller)
             results.append(res)
             start = res.n_windows // 2
             sat[i] = float(res.admitted[start:].mean()) / tenant.target_rate
@@ -269,4 +362,7 @@ class MultiTenantRuntime:
             results=tuple(results),
             satisfaction=sat,
             arbiter_log=tuple(arbiter.log),
+            arbiter=tuple(
+                arbiter.tenant_summary(name) for name in self.mtrace.names
+            ),
         )

@@ -1,0 +1,51 @@
+"""Deterministic observability: tracing, metrics, audit ledger, exporters.
+
+The layer answers "why did the runtime do that?" without perturbing what
+it observes:
+
+* ``trace``   — ``TraceRecorder``: nestable spans + point events on a
+                virtual clock (window index + integer tick); wall-clock
+                opt-in and strippable; ``NullRecorder`` zero-overhead
+                default; process-wide activation feeds the closed-form
+                dispatch hook;
+* ``metrics`` — counter / gauge / histogram registry for new series
+                (per-component throughput, guard evals, arbiter
+                grants/denials, queue high-water marks);
+* ``ledger``  — ``ReplanDecision``: every controller verdict with the
+                full two-sided guard breakdown; the legacy string log is
+                a derived view;
+* ``export``  — JSONL + Chrome trace-event (Perfetto) + text summary;
+* ``validate``— ``python -m repro.obs.validate`` schema smoke gate.
+
+See docs/architecture.md (Observability) and docs/api.md.
+"""
+
+from repro.obs.export import summary, to_chrome_trace, to_jsonl
+from repro.obs.ledger import ReplanDecision, ReplanLedger
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import (
+    NULL_RECORDER,
+    DispatchDecision,
+    NullRecorder,
+    TraceRecorder,
+    active_recorder,
+    record_dispatch,
+)
+
+__all__ = [
+    "TraceRecorder",
+    "NullRecorder",
+    "NULL_RECORDER",
+    "DispatchDecision",
+    "active_recorder",
+    "record_dispatch",
+    "MetricsRegistry",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "ReplanDecision",
+    "ReplanLedger",
+    "to_jsonl",
+    "to_chrome_trace",
+    "summary",
+]

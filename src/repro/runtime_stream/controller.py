@@ -66,6 +66,8 @@ from repro.core.first_assignment import first_assignment
 from repro.core.graph import ExecutionGraph, UserGraph
 from repro.core.profiles import Cluster
 from repro.core.refine import refine
+from repro.obs.ledger import ReplanDecision, ReplanLedger
+from repro.obs.trace import NULL_RECORDER
 from repro.core.schedule_state import (
     ScheduleState,
     _grow_component_fast,
@@ -186,6 +188,16 @@ class OnlineController:
         state).
       noise_seed: seed stream for the measurement noise (drawn per window,
         so runs stay deterministic).
+      recorder: optional ``repro.obs.TraceRecorder``; when enabled, every
+        consult gets a span, every decision is mirrored into the
+        recorder's record stream, and replans' ``refine`` calls emit
+        per-round profiling spans. Decisions land in :attr:`ledger`
+        either way — the recorder only adds the trace view.
+
+    Every decision point appends a structured
+    ``repro.obs.ReplanDecision`` (trigger, candidate move list, the full
+    two-sided guard breakdown, verdict) to :attr:`ledger`; the historical
+    string log is the derived :attr:`log` view over it.
     """
 
     def __init__(
@@ -205,6 +217,7 @@ class OnlineController:
         state_cost: float = 1.0,
         elastic_budget: float = float("inf"),
         elastic_moves: int | None = None,
+        recorder=None,
     ):
         self.utg = utg
         self.cluster = cluster
@@ -226,7 +239,25 @@ class OnlineController:
         self._cir_sum = float(cost_model.component_rates(utg, 1.0).sum())
         self._last_capacity: np.ndarray | None = None
         self._last_skew_epoch: int | None = None
-        self.log: list[tuple[int, str]] = []
+        self.recorder = NULL_RECORDER if recorder is None else recorder
+        self.ledger = ReplanLedger()
+
+    @property
+    def log(self) -> list[tuple[int, str]]:
+        """Legacy ``(window, message)`` view derived from :attr:`ledger`."""
+        return self.ledger.legacy_view()
+
+    def _decide(self, dec: ReplanDecision) -> None:
+        """Append to the ledger and mirror into the recorder (if any)."""
+        self.ledger.append(dec)
+        rec = self.recorder
+        if rec.enabled:
+            rec.decision(dec)
+            rec.metrics.counter(
+                "controller.replans_accepted"
+                if dec.accepted
+                else "controller.replans_rejected"
+            ).add(1)
 
     # ------------------------------------------------------------ drift
 
@@ -315,11 +346,16 @@ class OnlineController:
             transfer_pause_windows,
         )
 
+        rec = self.recorder
         reason = self._drifted(obs)
         self._last_capacity = obs.capacity.copy()
         self._last_skew_epoch = obs.skew_epoch
+        if rec.enabled:
+            rec.metrics.counter("controller.drift_checks").add(1)
         if reason is None:
             return None
+        if rec.enabled:
+            rec.event("drift", cat="controller", trigger=reason)
         capacity = obs.capacity
         if obs.capacity_ahead is not None:
             # Plan against the *future* capacity whenever notice is
@@ -344,6 +380,7 @@ class OnlineController:
             max_rounds=rounds,
             adaptive_growth=self.adaptive_growth,
             skew=obs.skew,
+            recorder=rec if rec.enabled else None,
         )
         # State-aware transfer pricing: which instances restart, and how
         # much keyed state each ships. The blind baseline prices the same
@@ -352,7 +389,14 @@ class OnlineController:
             obs.etg, plan.etg, skew=obs.skew if self.state_aware else None
         )
         if transfer.moves == 0:
-            self.log.append((obs.window, f"{reason}:no_move"))
+            self._decide(
+                ReplanDecision(
+                    window=obs.window,
+                    trigger=reason,
+                    outcome="no_move",
+                    candidate_moves=tuple(plan.moves),
+                )
+            )
             return None
         # Gain only materializes up to what the trace offers; the window
         # length comes from the observation (i.e. the executed trace), so
@@ -372,35 +416,41 @@ class OnlineController:
             (pauses * obs.window_s * inst_ir)[transfer.migrated].sum()
         )
         benefit -= pause_loss
-        cost = (
-            transfer.moves * self.migration_cost
-            + transfer.state_shipped * self.state_cost
-        )
+        move_cost = transfer.moves * self.migration_cost
+        state_cost = transfer.state_shipped * self.state_cost
+        cost = move_cost + state_cost
+        if rec.enabled:
+            rec.metrics.counter("controller.guard_evals").add(1)
         if cost > self.elastic_budget:
-            self.log.append(
-                (
-                    obs.window,
-                    f"{reason}:budget cost={cost:.0f} moves={transfer.moves} "
-                    f"state={transfer.state_shipped:.0f}",
-                )
-            )
-            return None
-        if benefit <= cost:
-            self.log.append(
-                (
-                    obs.window,
-                    f"{reason}:skip gain={gain_rate:.2f}/s moves={transfer.moves} "
-                    f"state={transfer.state_shipped:.0f}",
-                )
-            )
-            return None
-        self.log.append(
-            (
-                obs.window,
-                f"{reason}:replan gain={gain_rate:.2f}/s moves={transfer.moves} "
-                f"state={transfer.state_shipped:.0f}",
+            outcome = "budget"
+        elif benefit <= cost:
+            outcome = "skip"
+        else:
+            outcome = "replan"
+        self._decide(
+            ReplanDecision(
+                window=obs.window,
+                trigger=reason,
+                outcome=outcome,
+                moves=int(transfer.moves),
+                state_shipped=float(transfer.state_shipped),
+                gain_rate=float(gain_rate),
+                benefit=float(benefit),
+                pause_loss=pause_loss,
+                move_cost=float(move_cost),
+                state_cost=float(state_cost),
+                cost=float(cost),
+                budget=self.elastic_budget,
+                demand=float(demand),
+                current_throughput=float(cur_thpt),
+                plan_throughput=float(plan.throughput),
+                plan_rate=float(plan.rate),
+                horizon_windows=self.horizon_windows,
+                candidate_moves=tuple(plan.moves),
             )
         )
+        if outcome != "replan":
+            return None
         return plan.etg
 
 

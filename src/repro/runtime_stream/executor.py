@@ -50,6 +50,7 @@ import numpy as np
 from repro.core.graph import ExecutionGraph
 from repro.core.metrics import per_machine_utilization
 from repro.core.profiles import Cluster
+from repro.obs.trace import NULL_RECORDER
 
 from repro.runtime_stream.traces import CompiledTrace, TraceSpec
 
@@ -335,9 +336,14 @@ class StreamExecutor:
         seed: int = 0,
         config: RuntimeConfig | None = None,
         background_load: np.ndarray | None = None,
+        recorder=None,
     ):
         self.cluster = cluster
         self.config = config or RuntimeConfig()
+        # Observability (repro.obs): NULL_RECORDER makes every hook a no-op
+        # and keeps the windowed loop bit-identical to the uninstrumented
+        # path — the recorder only ever *appends* to its own state.
+        self.recorder = NULL_RECORDER if recorder is None else recorder
         self.trace = (
             trace
             if isinstance(trace, CompiledTrace)
@@ -379,7 +385,20 @@ class StreamExecutor:
         consulted every ``period`` windows with a ``WindowObs`` (see
         ``controller.py``) and may return a new placement, which takes
         effect next window (migrated/new instances pause per the config).
+
+        When the executor was constructed with a ``repro.obs``
+        ``TraceRecorder``, the run activates it (so closed-form dispatch
+        decisions anywhere below land in its log) and emits window-clock
+        events, back-pressure transitions, replan events and
+        per-component throughput / queue high-water metrics. The recorder
+        only appends to its own state: results and
+        ``RuntimeResult.fingerprint()`` are bit-identical with or without
+        it.
         """
+        with self.recorder.activate():
+            return self._run(controller)
+
+    def _run(self, controller=None) -> RuntimeResult:
         from repro.runtime_stream.controller import WindowObs
 
         cfg = self.config
@@ -433,7 +452,24 @@ class StreamExecutor:
         events: list[tuple[int, str]] = list(tr.events)
         bp_on = False
 
+        rec = self.recorder
+        obs_on = rec.enabled
+        if obs_on:
+            rec.event("run_start", cat="executor", windows=W, machines=m, trace=tr.name)
+            comp_tuples = [
+                rec.metrics.counter(f"executor.throughput.c{i}") for i in range(n)
+            ]
+            q_hwm = rec.metrics.gauge("executor.queue_max")
+            dropped_ctr = rec.metrics.counter("executor.dropped_tuples")
+            replan_ctr = rec.metrics.counter("executor.replans_applied")
+            # Per-window values accumulate in a vector and flush to the
+            # counters once after the loop — W*n Counter.add calls in the
+            # hot loop would dominate recorder overhead.
+            comp_acc = np.zeros(n, dtype=np.float64)
+
         for t in range(W):
+            if obs_on:
+                rec.set_window(t)
             cap = tr.capacity[t]
             r_adm = offered[t] * throttle
 
@@ -482,17 +518,23 @@ class StreamExecutor:
             queue_max[t] = float(backlog.max()) if backlog.size else 0.0
             machine_util[t] = per_machine_utilization(place.machine, tcu, m)
             throttle_log[t] = throttle
+            if obs_on:
+                comp_acc += prev_out
             q_frac = queue_max[t] / cfg.max_queue
             if q_frac > cfg.bp_high:
                 throttle = max(cfg.throttle_min, throttle * cfg.throttle_down)
                 if not bp_on:
                     events.append((t, "backpressure_on"))
                     bp_on = True
+                    if obs_on:
+                        rec.event("backpressure_on", cat="executor")
             elif q_frac < cfg.bp_low:
                 throttle = min(1.0, throttle * cfg.throttle_up)
                 if bp_on and throttle >= 1.0:
                     events.append((t, "backpressure_off"))
                     bp_on = False
+                    if obs_on:
+                        rec.event("backpressure_off", cat="executor")
             pause = np.maximum(pause - 1, 0)
 
             # 4. Controller hook (takes effect from the next window).
@@ -516,7 +558,11 @@ class StreamExecutor:
                         tr.capacity[min(t + notice, W - 1)] if notice > 0 else None
                     ),
                 )
-                new_etg = controller.update(obs)
+                if obs_on:
+                    with rec.span("controller.update", cat="controller"):
+                        new_etg = controller.update(obs)
+                else:
+                    new_etg = controller.update(obs)
                 if new_etg is not None:
                     transfer = placement_transfer(
                         place.etg, new_etg, skew=self.skew_model_at(t)
@@ -526,6 +572,22 @@ class StreamExecutor:
                     )
                     migrations[t] = transfer.moves
                     events.append((t, f"replan:{transfer.moves}moves"))
+                    if obs_on:
+                        replan_ctr.add(1)
+                        rec.event(
+                            "replan_applied",
+                            cat="executor",
+                            moves=int(transfer.moves),
+                            state_shipped=float(transfer.state_shipped),
+                        )
+
+        if obs_on:
+            for i in range(n):
+                comp_tuples[i].add(float(comp_acc[i]) * dt)
+            if W:
+                q_hwm.set(float(queue_max.max()))  # high-water mark
+                q_hwm.set(float(queue_max[W - 1]))  # value = last window
+            dropped_ctr.add(float(dropped.sum()) * dt)
 
         return RuntimeResult(
             name=tr.name,
