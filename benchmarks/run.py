@@ -14,6 +14,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
          on drift scenarios (writes BENCH_runtime.json)
   multitenant 100-tenant fairness scale, tenant-batched scoring, shared
          runtime (writes BENCH_multitenant.json)
+  netaware network-aware vs distance-blind placement on rack-structured
+         clusters (writes BENCH_netaware.json)
   planner beyond-paper heterogeneous LM fleet planning
   roofline dry-run roofline aggregation (requires dry-run artifacts)
 """
@@ -25,6 +27,7 @@ from benchmarks import (
     bench_instances,
     bench_largescale,
     bench_multitenant,
+    bench_netaware,
     bench_planner,
     bench_prediction,
     bench_refine,
@@ -52,6 +55,7 @@ def main() -> None:
         json_path="BENCH_runtime.json", trace_out="BENCH_runtime_trace"
     )
     bench_multitenant.main(json_path="BENCH_multitenant.json")
+    bench_netaware.main(json_path="BENCH_netaware.json")
     bench_planner.main()
     bench_roofline.main()
 

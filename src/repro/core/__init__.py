@@ -17,7 +17,9 @@ from repro.core.cost_model import (
     instance_rates,
     max_stable_rate,
     max_stable_rate_batch,
+    network_unit_load,
     predict,
+    resource_operands,
 )
 from repro.core.first_assignment import first_assignment
 from repro.core.graph import (
@@ -42,7 +44,13 @@ from repro.core.metrics import (
     weighted_utilization,
 )
 from repro.core.optimal import OptimalResult, optimal_schedule, placement_score
-from repro.core.profiles import Cluster, Profile, paper_cluster, paper_profile
+from repro.core.profiles import (
+    Cluster,
+    Profile,
+    paper_cluster,
+    paper_profile,
+    rack_distance_matrix,
+)
 from repro.core.refine import RefineResult, refine
 from repro.core.round_robin import round_robin_schedule
 from repro.core.schedule_state import ScheduleState
@@ -82,10 +90,13 @@ __all__ = [
     "refine",
     "max_stable_rate",
     "max_stable_rate_batch",
+    "network_unit_load",
+    "resource_operands",
     "Cluster",
     "Profile",
     "paper_cluster",
     "paper_profile",
+    "rack_distance_matrix",
     "round_robin_schedule",
     "SimResult",
     "measured_tcu",

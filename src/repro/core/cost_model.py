@@ -39,9 +39,19 @@ __all__ = [
     "closed_form_rates",
     "max_stable_rate",
     "max_stable_rate_batch",
+    "network_unit_load",
     "per_row_task_maps",
+    "resource_operands",
     "SkewModel",
 ]
+
+# Element cap for one row chunk of the network accumulation: the cut-traffic
+# term materializes (B_chunk, n_components, n_machines) scatter tensors (four
+# of them) plus the distance matvecs, so wide topologies on large clusters
+# would otherwise blow past the (B, T) sweep memory ``refine._SCORE_CHUNK``
+# budgets for. Rows are independent, so chunking never changes results
+# (regression-tested at m=90 in tests/test_resource_vector.py).
+_NET_CHUNK_ELEMS = 4_000_000
 
 
 def component_rates(utg: UserGraph, r0: float) -> np.ndarray:
@@ -387,6 +397,110 @@ def per_row_task_maps(
     return comp_u[inverse], unit_ir_u[inverse]
 
 
+def network_unit_load(
+    task_machine: np.ndarray,
+    comp: np.ndarray,
+    unit_ir: np.ndarray,
+    alpha: np.ndarray,
+    cir_unit: np.ndarray,
+    edges: tuple,
+    distance: np.ndarray,
+    net_penalty: float = 1.0,
+    chunk_elems: int = _NET_CHUNK_ELEMS,
+) -> np.ndarray:
+    """(B, m) per-machine cut-traffic CPU load at unit topology rate.
+
+    The Eidenbenz & Locher cut-traffic term, folded into the closed form's
+    variable coefficient: for every UTG edge (a, b), the unit-rate flow
+    from instance i of a to instance j of b is ``out_i * rfrac_j`` where
+
+    * ``out_i = alpha_a * unit_ir_i`` — sender i's unit-rate output stream
+      (eq. 6: a component's output replicates per subscribing component);
+    * ``rfrac_j = unit_ir_j / cir_unit_b`` — receiver j's share of b's
+      input (the even split 1/N_b for shuffle components; the realized key
+      share for skew rows — the same per-task ``unit_ir`` every scoring
+      regime already carries fixes both).
+
+    Each endpoint machine pays ``net_penalty * flow * distance[w_i, w_j]``
+    CPU points per unit rate (serialization/deserialization cost of the
+    cut stream; ``distance`` has a zero diagonal so colocated flow is
+    free). The rank-1 (out × rfrac) structure means the per-edge double
+    sum collapses to scatters by machine plus one distance matvec — O(B·T)
+    scatter + O(B·n·m²) matmul, never the full edge×machine product; row
+    chunks are capped at ``chunk_elems`` (B_chunk·n·m) elements.
+
+    ``comp`` / ``unit_ir`` are (T,) shared or (B, T) per-row task maps —
+    exactly the operands ``closed_form_rates`` receives, so every scoring
+    regime (shared / per-row / skew) prices the same network term.
+    """
+    task_machine = np.asarray(task_machine, dtype=np.int64)
+    B, T = task_machine.shape
+    n = cir_unit.shape[0]
+    m = distance.shape[0]
+    comp_bt = comp if comp.ndim == 2 else np.broadcast_to(comp[None, :], (B, T))
+    unit_bt = unit_ir if unit_ir.ndim == 2 else np.broadcast_to(
+        unit_ir[None, :], (B, T)
+    )
+    alpha = np.asarray(alpha, dtype=np.float64)
+    # Per-task sender output and receiver share (see docstring). A
+    # zero-input component carries no flow; its receive fraction is moot.
+    out_t = alpha[comp_bt] * unit_bt                         # (B, T)
+    cir_of_t = cir_unit[comp_bt]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        rfrac_t = np.where(cir_of_t > 0.0, unit_bt / np.maximum(cir_of_t, 1e-300), 0.0)
+
+    net = np.empty((B, m), dtype=np.float64)
+    chunk = max(1, int(chunk_elems) // max(1, n * m))
+    for start in range(0, B, chunk):
+        stop = min(start + chunk, B)
+        bc = stop - start
+        rows = np.repeat(np.arange(bc), T)
+        cols_c = comp_bt[start:stop].reshape(-1)
+        cols_w = task_machine[start:stop].reshape(-1)
+        send = np.zeros((bc, n, m), dtype=np.float64)
+        recv = np.zeros((bc, n, m), dtype=np.float64)
+        np.add.at(send, (rows, cols_c, cols_w), out_t[start:stop].reshape(-1))
+        np.add.at(recv, (rows, cols_c, cols_w), rfrac_t[start:stop].reshape(-1))
+        # D-matvec per (row, component): charge on machine w is
+        # Σ_v distance[w, v] × (other endpoint's mass on v).
+        send_d = send @ distance.T                            # (bc, n, m)
+        recv_d = recv @ distance.T
+        acc = np.zeros((bc, m), dtype=np.float64)
+        for a, b in edges:
+            acc += send[:, a, :] * recv_d[:, b, :]            # sender side
+            acc += recv[:, b, :] * send_d[:, a, :]            # receiver side
+        net[start:stop] = acc
+    return net * float(net_penalty)
+
+
+def resource_operands(
+    cluster: Cluster,
+    task_machine: np.ndarray,
+    comp: np.ndarray,
+    unit_ir: np.ndarray,
+    alpha: np.ndarray,
+    cir_unit: np.ndarray,
+    edges: tuple,
+    component_types: np.ndarray,
+) -> tuple[np.ndarray | None, np.ndarray | None, np.ndarray | None]:
+    """(net_var, mem, mem_capacity) extras for ``closed_form_rates``.
+
+    All three are ``None`` on a scalar-CPU cluster, so default-parameter
+    scoring takes exactly the legacy code path (the bit-identity
+    guarantee). ``mem`` matches ``comp``'s shape ((T,) or (B, T)).
+    """
+    net_var = mem = mem_capacity = None
+    if cluster.has_network:
+        net_var = network_unit_load(
+            task_machine, comp, unit_ir, alpha, cir_unit, edges,
+            cluster.distance, cluster.net_penalty,
+        )
+    if cluster.has_memory:
+        mem = cluster.profile.mem[component_types[comp]]
+        mem_capacity = cluster.mem_capacity
+    return net_var, mem, mem_capacity
+
+
 def max_stable_rate_batch(
     etg: ExecutionGraph,
     cluster: Cluster,
@@ -453,10 +567,19 @@ def max_stable_rate_batch(
             comp = etg.task_component()
             task_types = etg.utg.component_types[comp][None, :]
             unit_ir = skew.per_task_unit_ir(etg.n_instances)
+        net_var = mem = mem_cap = None
+        if cluster.has_resources:
+            net_var, mem, mem_cap = resource_operands(
+                cluster, task_machine, comp, unit_ir, etg.utg.alpha,
+                skew.cir_unit, etg.utg.edges, etg.utg.component_types,
+            )
         mtypes = cluster.machine_types[task_machine]
         e = cluster.profile.e[task_types, mtypes]
         met = cluster.profile.met[task_types, mtypes]
-        return closed_form_rates(task_machine, e, met, unit_ir, cluster.capacity)
+        return closed_form_rates(
+            task_machine, e, met, unit_ir, cluster.capacity,
+            net_var=net_var, mem=mem, mem_capacity=mem_cap,
+        )
     if (
         resolve_closed_form_backend(
             backend,
@@ -484,11 +607,22 @@ def max_stable_rate_batch(
         comp = etg.task_component()
         task_types = etg.utg.component_types[comp][None, :]
         unit_ir = instance_rates(etg, 1.0)             # (T,) IR per unit R
+    net_var = mem = mem_cap = None
+    if cluster.has_resources:
+        if n_instances is None:
+            cir_unit = component_rates(etg.utg, 1.0)
+        net_var, mem, mem_cap = resource_operands(
+            cluster, task_machine, comp, unit_ir, etg.utg.alpha,
+            cir_unit, etg.utg.edges, etg.utg.component_types,
+        )
 
     mtypes = cluster.machine_types[task_machine]       # (B, T)
     e = cluster.profile.e[task_types, mtypes]
     met = cluster.profile.met[task_types, mtypes]
-    return closed_form_rates(task_machine, e, met, unit_ir, cluster.capacity)
+    return closed_form_rates(
+        task_machine, e, met, unit_ir, cluster.capacity,
+        net_var=net_var, mem=mem, mem_capacity=mem_cap,
+    )
 
 
 def closed_form_rates(
@@ -497,6 +631,9 @@ def closed_form_rates(
     met: np.ndarray,
     unit_ir: np.ndarray,
     capacity: np.ndarray,
+    net_var: np.ndarray | None = None,
+    mem: np.ndarray | None = None,
+    mem_capacity: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Shared closed-form scoring core (the single NumPy copy of the math).
 
@@ -516,6 +653,18 @@ def closed_form_rates(
     or (B, m) when rows carry their own — the multi-tenant batch scorer
     prices each tenant's candidates against that tenant's residual
     capacity this way.
+
+    Resource-vector extras (all default ``None`` = scalar-CPU scoring,
+    byte-for-byte today's math):
+
+    * ``net_var`` — (B, m) per-machine cut-traffic CPU load at unit rate
+      (``network_unit_load``); added to the variable coefficient, so
+      ``R* = min_w (cap_w - met_w) / (var_w + net_w)`` — the closed form
+      with the network unit-IR folded in.
+    * ``mem`` / ``mem_capacity`` — (T,)/(B, T) per-task memory demand and
+      (m,)/(B, m) per-machine memory capacity. Memory is rate-independent,
+      so it is a *hard* feasibility mask: any machine over memory makes
+      the row's rate 0 regardless of CPU head room.
     """
     B, T = task_machine.shape
     m = capacity.shape[-1]
@@ -526,10 +675,22 @@ def closed_form_rates(
     met_w = np.zeros((B, m), dtype=np.float64)
     np.add.at(var_w, (rows, cols), (e * unit_ir_bt).reshape(-1))
     np.add.at(met_w, (rows, cols), met.reshape(-1))
+    if net_var is not None:
+        var_w = var_w + net_var
 
     cap_b = capacity if capacity.ndim == 2 else capacity[None, :]
     head = cap_b - met_w                               # (B, m)
     infeasible = np.any(head < 0.0, axis=1)
+    if mem is not None:
+        mem_bt = mem if mem.ndim == 2 else mem[None, :]
+        mem_w = np.zeros((B, m), dtype=np.float64)
+        np.add.at(
+            mem_w, (rows, cols), np.broadcast_to(mem_bt, (B, T)).reshape(-1)
+        )
+        mem_cap_b = (
+            mem_capacity if mem_capacity.ndim == 2 else mem_capacity[None, :]
+        )
+        infeasible |= np.any(mem_w > mem_cap_b, axis=1)
     # over="ignore": a zero-var machine with capacity-scale head can hit
     # head/1e-300 -> inf; np.where discards it, so silence the warning.
     with np.errstate(divide="ignore", over="ignore"):

@@ -28,6 +28,15 @@ def first_assignment(utg: UserGraph, cluster: Cluster, r0: float) -> ExecutionGr
     cir = cost_model.component_rates(utg, r0)  # one instance each => IR = CIR
     util = np.zeros(cluster.n_machines, dtype=np.float64)
     placement = np.zeros(utg.n_components, dtype=np.int64)
+    # Hard memory constraint (resource-vector clusters): machines whose
+    # remaining memory cannot hold the instance are masked out of the TCU
+    # ranking; the scalar-CPU default never builds the mask, so its lexsort
+    # keys are byte-identical to before.
+    mem_used = (
+        np.zeros(cluster.n_machines, dtype=np.float64)
+        if cluster.has_memory
+        else None
+    )
 
     for i in utg.topo_order():
         ttype = int(utg.component_types[i])
@@ -35,11 +44,21 @@ def first_assignment(utg: UserGraph, cluster: Cluster, r0: float) -> ExecutionGr
         met_row = cluster.profile.met[ttype][cluster.machine_types]  # (m,)
         tcu = e_row * cir[i] + met_row                               # eq. 5
         mac_after = cluster.capacity - (util + tcu)
+        tcu_key = np.round(tcu, 9)
+        if mem_used is not None:
+            mem_i = float(cluster.profile.mem[ttype])
+            fits = mem_used + mem_i <= cluster.mem_capacity
+            if fits.any():
+                tcu_key = np.where(fits, tcu_key, np.inf)
+            # else: nothing fits — fall through to the memory-blind rule
+            # (the schedule is infeasible either way; R* masks it to 0).
         # Least-TCU machine; among near-ties prefer max remaining capacity.
-        order = np.lexsort((-mac_after, np.round(tcu, 9)))
+        order = np.lexsort((-mac_after, tcu_key))
         best = int(order[0])
         placement[i] = best
         util[best] += tcu[best]
+        if mem_used is not None:
+            mem_used[best] += mem_i
 
     return ExecutionGraph(
         utg=utg,

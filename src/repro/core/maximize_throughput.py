@@ -77,6 +77,7 @@ def _greedy_place(
     existing_counts: np.ndarray,
     tcu: np.ndarray,
     k: int,
+    max_new: np.ndarray | None = None,
 ) -> list[int] | None:
     """Greedily place ``k`` equal chunks of per-machine cost ``tcu``.
 
@@ -84,17 +85,27 @@ def _greedy_place(
     equivalence contract depends on this exact feasibility check, lexsort
     tie-breaking and float accumulation order, so there is one copy.
 
+    ``max_new`` optionally caps the number of *new* chunks per machine (the
+    hard memory constraint on resource-vector clusters); ``None`` — the
+    default and the scalar-CPU path — leaves the rule untouched.
+
     Returns the chosen machines in placement order, or None if some chunk
     does not fit.
     """
     load = base_load + existing_counts * tcu
+    budget = None if max_new is None else np.asarray(max_new, dtype=np.float64).copy()
     placed: list[int] = []
     for _ in range(k):
-        w = _least_tcu_machine(tcu, capacity - (load + tcu))
+        head = capacity - (load + tcu)
+        if budget is not None:
+            head = np.where(budget >= 1.0, head, -np.inf)
+        w = _least_tcu_machine(tcu, head)
         if w is None:
             return None
         placed.append(w)
         load[w] += tcu[w]
+        if budget is not None:
+            budget[w] -= 1.0
     return placed
 
 
@@ -182,6 +193,15 @@ def maximize_throughput(
         )
     if engine != "reference":
         raise ValueError(f"unknown engine {engine!r}; use 'incremental' or 'reference'")
+    if cluster.has_resources:
+        # The reference loop scores via ``predict`` (scalar-CPU eq. 5 only);
+        # running it on a resource-vector cluster would silently optimize a
+        # different objective than the incremental engine. Same contract as
+        # skew-aware refine: resource clusters require the state engine.
+        raise ValueError(
+            "engine='reference' does not support memory/network resource "
+            "clusters; use engine='incremental'"
+        )
     scale = 1.0
     current = etg.copy()
     current_rate = float(r0)

@@ -72,6 +72,8 @@ def _class_bound(
     e_cm: np.ndarray,
     met_cm: np.ndarray,
     capacity: np.ndarray,
+    mem_c: np.ndarray | None = None,
+    mem_capacity: np.ndarray | None = None,
 ) -> float:
     """Upper bound on max stable throughput over *all* placements with
     instance counts ``n_inst`` — no enumeration, O(n·m).
@@ -89,6 +91,14 @@ def _class_bound(
       ``R <= (cap_w - met_cw) / (e_cw · u_c)``; the best case is the max
       over machines, and every component must satisfy its own, so the min
       over components bounds R.
+
+    On resource-vector clusters the hard memory constraint enters as two
+    more valid relaxations (``mem_c`` per-instance demand, ``mem_capacity``
+    per machine): a class whose aggregate memory demand exceeds the
+    cluster's total memory — or one of whose components fits on no machine
+    even alone — is infeasible at any rate. The cut-traffic term is
+    *ignored*: network load only ever adds to the variable coefficient, so
+    a net-blind bound remains an upper bound on the generalized objective.
 
     Returns the bounded throughput (``R_ub * Σ_c CIR_c(1)``), inflated by
     ``_BOUND_SLACK``; ``inf`` when unbounded, ``0.0`` when the class is
@@ -108,6 +118,10 @@ def _class_bound(
     )
     head = capacity[None, :] - met_cm                   # (n, m)
     ok = head >= 0.0
+    if mem_c is not None:
+        if float((n_inst * mem_c).sum()) > float(mem_capacity.sum()):
+            return 0.0  # aggregate memory demand exceeds the cluster's
+        ok &= mem_c[:, None] <= mem_capacity[None, :]   # (n, m)
     if not np.all(ok.any(axis=1)):
         return 0.0  # some component fits on no machine even alone
     var = e_cm * u[:, None]                             # (n, m)
@@ -134,6 +148,8 @@ def _ordered_classes(
     e_cm: np.ndarray,
     met_cm: np.ndarray,
     capacity: np.ndarray,
+    mem_c: np.ndarray | None = None,
+    mem_capacity: np.ndarray | None = None,
 ) -> list[tuple[int, np.ndarray, float]]:
     """Composition classes as (original rank, n_inst, bound) in processing
     order.
@@ -158,7 +174,10 @@ def _ordered_classes(
     if not prune_bound:
         return [(i, v, np.inf) for i, v in enumerate(vecs)]
     bounds = np.array(
-        [_class_bound(v, cir_unit, e_cm, met_cm, capacity) for v in vecs]
+        [
+            _class_bound(v, cir_unit, e_cm, met_cm, capacity, mem_c, mem_capacity)
+            for v in vecs
+        ]
     )
     order = np.argsort(-bounds, kind="stable")
     return [(int(i), vecs[i], float(bounds[i])) for i in order]
@@ -371,6 +390,9 @@ def optimal_schedule(
     cir_unit = component_rates(utg, 1.0)
     e_cm = cluster.profile.e[utg.component_types][:, cluster.machine_types]
     met_cm = cluster.profile.met[utg.component_types][:, cluster.machine_types]
+    mem_c = (
+        cluster.profile.mem[utg.component_types] if cluster.has_memory else None
+    )
     best_etg: ExecutionGraph | None = None
     best_thpt = -1.0
     best_rank = np.inf
@@ -385,7 +407,7 @@ def optimal_schedule(
     # best-bound-first when the beam bound is on.
     ordered = _ordered_classes(
         utg, max_total_tasks, prune_bound, cir_unit, e_cm, met_cm,
-        cluster.capacity,
+        cluster.capacity, mem_c, cluster.mem_capacity,
     )
     for pos, (rank, n_inst, bound) in enumerate(ordered):
         if prune_bound and bound < best_thpt:
@@ -483,6 +505,9 @@ def _optimal_state(
     cir_unit = component_rates(utg, 1.0)
     e_cm = cluster.profile.e[utg.component_types][:, cluster.machine_types]
     met_cm = cluster.profile.met[utg.component_types][:, cluster.machine_types]
+    mem_c = (
+        cluster.profile.mem[utg.component_types] if cluster.has_memory else None
+    )
     best_etg: ExecutionGraph | None = None
     best_thpt = -1.0
     best_rank = np.inf
@@ -495,7 +520,7 @@ def _optimal_state(
 
     ordered = _ordered_classes(
         utg, max_total_tasks, prune_bound, cir_unit, e_cm, met_cm,
-        cluster.capacity,
+        cluster.capacity, mem_c, cluster.mem_capacity,
     )
     for pos, (rank, n_inst, bound) in enumerate(ordered):
         if prune_bound and bound < best_thpt:

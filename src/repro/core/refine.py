@@ -62,7 +62,22 @@ __all__ = ["RefineResult", "refine"]
 
 # Candidate rows scored per vectorized sweep; bounds the (chunk, T) batch
 # memory on large clusters without changing results (rows are independent).
+# Network-aware clusters tighten this further (see ``_effective_chunk``):
+# the cut-traffic term expands every row into (n_components, m) scatter
+# tensors plus distance matvecs, so the naive cap would materialize the
+# full edge×machine product on wide topologies (regression-tested at m=90).
 _SCORE_CHUNK = 16_384
+
+
+def _effective_chunk(cluster: Cluster, n_components: int) -> int:
+    """Rows per scoring sweep: ``_SCORE_CHUNK``, tightened on network-aware
+    clusters so one sweep's distance-expanded accumulation stays within the
+    ``cost_model._NET_CHUNK_ELEMS`` (chunk · n · m) element budget instead
+    of relying on the inner chunking to re-split an oversized batch."""
+    if not cluster.has_network:
+        return _SCORE_CHUNK
+    per_row = max(1, n_components * cluster.n_machines)
+    return min(_SCORE_CHUNK, max(256, cost_model._NET_CHUNK_ELEMS // per_row))
 
 # Total steps (prefix included) a depth-adaptive growth chain may reach —
 # a runaway backstop far above any profitable chain, shared by the lockstep
@@ -666,8 +681,9 @@ def _refine_state(
         pos_b = np.concatenate([reloc_pos, swap_b])
         val_b = np.concatenate([reloc_w, base_tm[swap_a]])
         scores = np.empty(b1 + b2, dtype=np.float64)
-        for start in range(0, b1 + b2, _SCORE_CHUNK):
-            stop = min(start + _SCORE_CHUNK, b1 + b2)
+        chunk = _effective_chunk(cluster, n)
+        for start in range(0, b1 + b2, chunk):
+            stop = min(start + chunk, b1 + b2)
             tm = np.tile(base_tm, (stop - start, 1))
             rows = np.arange(stop - start)
             tm[rows, pos_a[start:stop]] = val_a[start:stop]

@@ -97,9 +97,12 @@ class ScheduleState:
         "e_cm",
         "met_cm",
         "cir_unit",
+        "mem_c",
         "skew",
         "_met_load",
         "_var_load",
+        "_mem_load",
+        "_net_load",
     )
 
     def __init__(
@@ -118,6 +121,7 @@ class ScheduleState:
         self.e_cm = cluster.profile.e[ttypes][:, cluster.machine_types]
         self.met_cm = cluster.profile.met[ttypes][:, cluster.machine_types]
         self.cir_unit = cost_model.component_rates(utg, 1.0)
+        self.mem_c = cluster.profile.mem[ttypes] if cluster.has_memory else None
         if skew is not None and skew.utg is not utg:
             raise ValueError("skew model was built for a different topology")
         self.skew = skew
@@ -127,6 +131,8 @@ class ScheduleState:
                 self.comp_counts[c, w] += 1
         self._met_load: np.ndarray | None = None
         self._var_load: np.ndarray | None = None
+        self._mem_load: np.ndarray | None = None
+        self._net_load: np.ndarray | None = None
 
     @classmethod
     def from_etg(
@@ -176,6 +182,58 @@ class ScheduleState:
                 self._var_load = self._skew_variable_load(self.cir_unit)
         return self._var_load
 
+    @property
+    def mem_load(self) -> np.ndarray:
+        """(m,) resident memory per machine (rate-independent hard resource).
+
+        Accumulated per task via ``np.add.at`` so the floats match the batch
+        scorer's memory-mask accumulation exactly. Zeros on clusters without
+        a memory model.
+        """
+        if self._mem_load is None:
+            load = np.zeros(self.cluster.n_machines, dtype=np.float64)
+            if self.mem_c is not None:
+                comp = np.repeat(
+                    np.arange(self.utg.n_components), self.n_instances
+                )
+                np.add.at(load, self.task_machine(), self.mem_c[comp])
+            self._mem_load = load
+        return self._mem_load
+
+    @property
+    def net_load(self) -> np.ndarray:
+        """(m,) d network-load / d rate per machine — the cut-traffic term.
+
+        ``cost_model.network_unit_load`` on the current placement (the same
+        operands the batch scorer uses, so incremental and batched scores
+        agree). Recomputed lazily after structural mutations, like the
+        other load caches. Zeros on distance-free clusters.
+        """
+        if self._net_load is None:
+            if not self.cluster.has_network:
+                self._net_load = np.zeros(
+                    self.cluster.n_machines, dtype=np.float64
+                )
+            else:
+                comp = np.repeat(
+                    np.arange(self.utg.n_components), self.n_instances
+                )
+                if self.skew is None:
+                    unit_ir = (self.cir_unit / self.n_instances)[comp]
+                else:
+                    unit_ir = self.skew.per_task_unit_ir(self.n_instances)
+                self._net_load = cost_model.network_unit_load(
+                    self.task_machine()[None, :],
+                    comp,
+                    unit_ir,
+                    self.utg.alpha,
+                    self.cir_unit,
+                    self.utg.edges,
+                    self.cluster.distance,
+                    self.cluster.net_penalty,
+                )[0]
+        return self._net_load
+
     def utilization(self, rate: float) -> np.ndarray:
         """(m,) predicted machine utilization at topology input rate ``rate``.
 
@@ -189,22 +247,38 @@ class ScheduleState:
         """
         cir = cost_model.component_rates(self.utg, rate)
         if self.skew is not None:
-            return self.met_load + self._skew_variable_load(cir)
-        per_inst = cir / self.n_instances
-        return self.met_load + (self.e_cm * self.comp_counts * per_inst[:, None]).sum(
-            axis=0
-        )
+            util = self.met_load + self._skew_variable_load(cir)
+        else:
+            per_inst = cir / self.n_instances
+            util = self.met_load + (
+                self.e_cm * self.comp_counts * per_inst[:, None]
+            ).sum(axis=0)
+        if self.cluster.has_network:
+            util = util + rate * self.net_load
+        return util
 
     def feasible(self, rate: float) -> bool:
         """Reference feasibility: every machine's MAC >= 0 at ``rate``."""
         return bool(np.all(self.cluster.capacity - self.utilization(rate) >= 0.0))
 
     def max_stable_rate(self) -> float:
-        """Closed-form R* = min_w (cap_w - met_w) / var_w (paper eq. 5 linearity)."""
+        """Closed-form R* = min_w (cap_w - met_w) / (var_w + net_w).
+
+        Paper eq. 5 linearity; the cut-traffic term is linear in R too, so
+        folding ``net_load`` into the variable coefficient keeps the closed
+        form exact. Memory is rate-independent, so an over-memory machine
+        makes the placement infeasible at any rate (R* = 0).
+        """
         head = self.cluster.capacity - self.met_load
         if np.any(head < 0.0):
             return 0.0
+        if self.cluster.has_memory and np.any(
+            self.mem_load > self.cluster.mem_capacity
+        ):
+            return 0.0
         var = self.var_load
+        if self.cluster.has_network:
+            var = var + self.net_load
         with np.errstate(divide="ignore"):
             limits = np.where(var > 0.0, head / np.maximum(var, 1e-300), np.inf)
         return float(max(np.min(limits), 0.0))
@@ -216,17 +290,25 @@ class ScheduleState:
         ``rate`` is stable iff ``Fraction(rate) <= max_stable_rate_exact()``
         — the feasibility boundary is a hard number, with no float-rounding
         band around it. A negative result means the rate-independent load
-        alone already exceeds some machine's capacity.
+        alone (MET, or the hard memory constraint) already exceeds some
+        machine's capacity. The cut-traffic coefficient enters the rational
+        arithmetic exactly (``Fraction(var) + Fraction(net)``).
         """
+        if self.cluster.has_memory and np.any(
+            self.mem_load > self.cluster.mem_capacity
+        ):
+            return Fraction(-1)
         best: Fraction | None = None
-        for cap_w, met_w, var_w in zip(
+        for cap_w, met_w, var_w, net_w in zip(
             self.cluster.capacity.tolist(),
             self.met_load.tolist(),
             self.var_load.tolist(),
+            self._net_list(),
         ):
             head = Fraction(cap_w) - Fraction(met_w)
-            if var_w > 0.0:
-                lim = head / Fraction(var_w)
+            var = Fraction(var_w) + Fraction(net_w)
+            if var > 0:
+                lim = head / var
             elif head < 0:
                 return Fraction(-1)
             else:
@@ -234,6 +316,13 @@ class ScheduleState:
             if best is None or lim < best:
                 best = lim
         return best
+
+    def _net_list(self) -> list[float]:
+        """Per-machine cut-traffic coefficients for the exact paths (all
+        zeros on distance-free clusters, without touching the cache)."""
+        if not self.cluster.has_network:
+            return [0.0] * self.cluster.n_machines
+        return self.net_load.tolist()
 
     def feasible_linear_exact(self, rate: float) -> bool:
         """Exact feasibility of the linear model at ``rate``.
@@ -246,16 +335,26 @@ class ScheduleState:
 
     def first_over_machine_exact(self, rate: float) -> "int | None":
         """First machine (reference index order) over capacity at ``rate``
-        under the exact linear model, or ``None`` if every machine fits."""
+        under the exact linear model, or ``None`` if every machine fits.
+        A machine over its memory capacity is over at any rate."""
         r = Fraction(rate)
-        for w, (cap_w, met_w, var_w) in enumerate(
+        mem_over = (
+            self.mem_load > self.cluster.mem_capacity
+            if self.cluster.has_memory
+            else None
+        )
+        for w, (cap_w, met_w, var_w, net_w) in enumerate(
             zip(
                 self.cluster.capacity.tolist(),
                 self.met_load.tolist(),
                 self.var_load.tolist(),
+                self._net_list(),
             )
         ):
-            if Fraction(met_w) + r * Fraction(var_w) > Fraction(cap_w):
+            if mem_over is not None and mem_over[w]:
+                return w
+            util = Fraction(met_w) + r * (Fraction(var_w) + Fraction(net_w))
+            if util > Fraction(cap_w):
                 return w
         return None
 
@@ -268,6 +367,8 @@ class ScheduleState:
         self.assignment[component].append(int(machine))
         self._met_load = None
         self._var_load = None
+        self._mem_load = None
+        self._net_load = None
 
     def relocate_instance(self, component: int, k: int, machine: int) -> None:
         """O(1) delta: move instance (component, k) to ``machine``.
@@ -281,6 +382,8 @@ class ScheduleState:
         self.assignment[component][k] = int(machine)
         self._met_load = None
         self._var_load = None
+        self._mem_load = None
+        self._net_load = None
 
     def swap_instances(self, ca: int, ka: int, cb: int, kb: int) -> None:
         """O(1) delta: exchange the machines of instances (ca, ka) and (cb, kb)."""
@@ -299,6 +402,8 @@ class ScheduleState:
         self.n_instances[component] -= 1
         self._met_load = None
         self._var_load = None
+        self._mem_load = None
+        self._net_load = None
 
     def evacuate_machines(self, dead: np.ndarray, rate: float) -> int:
         """Relocate every instance hosted on a ``dead``-masked machine.
@@ -322,6 +427,7 @@ class ScheduleState:
         cir = cost_model.component_rates(self.utg, rate)
         per_inst = cir / self.n_instances
         util = self.utilization(rate)
+        mem = self.mem_load.copy() if self.cluster.has_memory else None
         moves = 0
         for c in range(self.utg.n_components):
             tcu_w = self.e_cm[c] * per_inst[c] + self.met_cm[c]
@@ -331,12 +437,27 @@ class ScheduleState:
                 # Dead machines get -inf head so the shared rule never
                 # picks them; when nothing fits, least-overloaded alive.
                 head = np.where(dead, -np.inf, self.cluster.capacity - util - tcu_w)
-                target = _least_tcu_machine(tcu_w, head)
+                if mem is not None:
+                    # Machines the instance's memory would not fit on are
+                    # masked out of the fit rule; the nothing-fits fallback
+                    # stays least-overloaded-alive (memory-blind — refine
+                    # cannot polish from a stranded instance).
+                    fit_head = np.where(
+                        mem + self.mem_c[c] > self.cluster.mem_capacity,
+                        -np.inf,
+                        head,
+                    )
+                else:
+                    fit_head = head
+                target = _least_tcu_machine(tcu_w, fit_head)
                 if target is None:
                     target = int(np.argmax(head))
                 self.relocate_instance(c, k, target)
                 util[w] -= tcu_w[w]
                 util[target] += tcu_w[target]
+                if mem is not None:
+                    mem[w] -= self.mem_c[c]
+                    mem[target] += self.mem_c[c]
                 moves += 1
         return moves
 
@@ -434,6 +555,9 @@ class ScheduleState:
                     raise ValueError("task_machine must be (B, sum(n_instances))")
                 unit_ir = self.skew.per_task_unit_ir(n_inst)
                 gather_comp = comp[None, :]
+            net_var, mem, mem_cap = self._resource_operands(
+                task_machine, comp, unit_ir
+            )
             if (
                 resolve_closed_form_backend(
                     backend,
@@ -453,11 +577,15 @@ class ScheduleState:
                     self.e_cm,
                     self.met_cm,
                     self.cluster.capacity,
+                    net_var=net_var,
+                    mem=mem,
+                    mem_capacity=mem_cap,
                 )
             e = self.e_cm[gather_comp, task_machine]
             met = self.met_cm[gather_comp, task_machine]
             return cost_model.closed_form_rates(
-                task_machine, e, met, unit_ir, self.cluster.capacity
+                task_machine, e, met, unit_ir, self.cluster.capacity,
+                net_var=net_var, mem=mem, mem_capacity=mem_cap,
             )
         if n_inst.ndim == 2:
             if n_inst.shape != (task_machine.shape[0], n):
@@ -474,6 +602,9 @@ class ScheduleState:
             # instance_rates()' per-task division exactly, so floats agree.
             unit_ir = (self.cir_unit / n_inst)[comp]
             gather_comp = comp[None, :]
+        net_var, mem, mem_cap = self._resource_operands(
+            task_machine, comp, unit_ir
+        )
         if (
             resolve_closed_form_backend(
                 backend,
@@ -493,11 +624,36 @@ class ScheduleState:
                 self.e_cm,
                 self.met_cm,
                 self.cluster.capacity,
+                net_var=net_var,
+                mem=mem,
+                mem_capacity=mem_cap,
             )
         e = self.e_cm[gather_comp, task_machine]          # (B, T)
         met = self.met_cm[gather_comp, task_machine]
         return cost_model.closed_form_rates(
-            task_machine, e, met, unit_ir, self.cluster.capacity
+            task_machine, e, met, unit_ir, self.cluster.capacity,
+            net_var=net_var, mem=mem, mem_capacity=mem_cap,
+        )
+
+    def _resource_operands(
+        self,
+        task_machine: np.ndarray,
+        comp: np.ndarray,
+        unit_ir: np.ndarray,
+    ) -> tuple[np.ndarray | None, np.ndarray | None, np.ndarray | None]:
+        """Resource-vector extras for a candidate batch — all ``None`` on
+        scalar-CPU clusters so default scoring stays byte-identical."""
+        if not self.cluster.has_resources:
+            return None, None, None
+        return cost_model.resource_operands(
+            self.cluster,
+            task_machine,
+            comp,
+            unit_ir,
+            self.utg.alpha,
+            self.cir_unit,
+            self.utg.edges,
+            self.utg.component_types,
         )
 
     def snapshot(self) -> tuple:
@@ -513,6 +669,8 @@ class ScheduleState:
         self.assignment = [list(a) for a in snap[2]]
         self._met_load = None
         self._var_load = None
+        self._mem_load = None
+        self._net_load = None
 
     def to_etg(self) -> ExecutionGraph:
         return ExecutionGraph(
@@ -555,8 +713,21 @@ def _grow_component_fast(
     util = state.met_load + (
         state.e_cm * state.comp_counts * per_inst[:, None]
     ).sum(axis=0)
+    if cluster.has_network:
+        # Current cut-traffic load enters the head as a fixed charge (the
+        # grown component's own re-split is approximated as unchanged —
+        # the main loop re-scores the true generalized R* after growth).
+        util = util + rate * state.net_load
     own_tcu = e_row * (cir / n0) + met_row
     base_load = util - existing_counts * own_tcu
+
+    # Hard memory constraint: at most floor(room / mem_c) new instances per
+    # machine (no float slack — memory infeasibility cannot be admitted;
+    # under-counting an exact fit by one is merely conservative).
+    mem_new = None
+    if cluster.has_memory and float(state.mem_c[component]) > 0.0:
+        mem_room = np.maximum(cluster.mem_capacity - state.mem_load, 0.0)
+        mem_new = np.floor(mem_room / float(state.mem_c[component]))
 
     max_target = n0 + (max_extra if max_extra is not None else max(2 * n0, 2 * m, 16))
     targets = np.arange(n0 + 1, max_target + 1)
@@ -577,14 +748,19 @@ def _grow_component_fast(
     # bound on any machine that is not already over capacity.
     unlimited = (tcu_t <= 0.0) & (avail[None, :] >= 0.0)
     fit = np.where(unlimited, float(max_target), fit)
-    n_new = np.clip(fit - existing_counts[None, :], 0.0, None).sum(axis=1)
+    n_new_w = np.clip(fit - existing_counts[None, :], 0.0, None)
+    if mem_new is not None:
+        n_new_w = np.minimum(n_new_w, mem_new[None, :])
+    n_new = n_new_w.sum(axis=1)
     admitted = targets[n_new >= (targets - n0)]
 
     for target in admitted:
         target = int(target)
         per_ir = cir / target
         tcu = e_row * per_ir + met_row
-        placed = _greedy_place(cap, base_load, existing_counts, tcu, target - n0)
+        placed = _greedy_place(
+            cap, base_load, existing_counts, tcu, target - n0, max_new=mem_new
+        )
         if placed is None:
             continue
         for w in placed:
@@ -657,7 +833,10 @@ def maximize_throughput_incremental(
         # Over-utilization: hottest task on the first over-utilized machine
         # (reference index order) under the same linear model; the exact
         # rational scan runs only when float rounding hides the machine.
-        head = cluster.capacity - (state.met_load + current_rate * state.var_load)
+        var = state.var_load
+        if cluster.has_network:
+            var = var + state.net_load
+        head = cluster.capacity - (state.met_load + current_rate * var)
         over_idx = np.flatnonzero(head < 0.0)
         if over_idx.size:
             over_w = int(over_idx[0])

@@ -198,8 +198,8 @@ def simulate_batch_jax(
 # ----------------------------------------------------- closed-form scoring
 
 
-@functools.lru_cache(maxsize=2)
-def _msr_kernel(per_row: bool = False):
+@functools.lru_cache(maxsize=4)
+def _msr_kernel(per_row: bool = False, with_resources: bool = False):
     """Jitted closed-form max-stable-rate scorer (paper eq. 5 linearity).
 
     Mirrors ``cost_model.max_stable_rate_batch``'s NumPy math: per-machine
@@ -227,13 +227,19 @@ def _msr_kernel(per_row: bool = False):
     shared or (B, m) per-row (the multi-tenant batch scorer prices each
     row against its tenant's residual capacity); the rank difference is a
     trace-time constant, so both shapes share one cached variant.
+
+    ``with_resources=True`` selects the resource-vector variant: three
+    extra operands — ``net_var`` (B, m) cut-traffic load added to the
+    variable coefficient, ``mem`` per-task memory demand and
+    ``mem_capacity`` per-machine memory ceiling driving the hard
+    feasibility mask (absent resource types are passed as zeros /
+    +inf). Kept as separate cached kernels so scalar-CPU scoring never
+    re-traces and executes byte-for-byte the legacy contraction.
     """
     import jax
     import jax.numpy as jnp
 
-    @jax.jit
-    def kernel(task_machine, comp, unit_ir, e_cm, met_cm, capacity):
-        B, T = task_machine.shape
+    def _accumulate(task_machine, comp, unit_ir, e_cm, met_cm, capacity):
         m = capacity.shape[-1]
         cmap = comp if per_row else comp[None, :]
         e = e_cm[cmap, task_machine]                 # (B, T)
@@ -247,16 +253,49 @@ def _msr_kernel(per_row: bool = False):
         )
         var_w = jnp.sum(jnp.where(onehot, ev[:, None, :], 0.0), axis=-1)
         met_w = jnp.sum(jnp.where(onehot, met[:, None, :], 0.0), axis=-1)
+        return onehot, var_w, met_w
+
+    def _finish(var_w, met_w, capacity, unit_ir, infeasible_extra=None):
         cap_b = capacity if capacity.ndim == 2 else capacity[None, :]
         head = cap_b - met_w
         infeasible = jnp.any(head < 0.0, axis=1)
+        if infeasible_extra is not None:
+            infeasible = infeasible | infeasible_extra
         limits = jnp.where(var_w > 0.0, head / jnp.maximum(var_w, 1e-300), jnp.inf)
         rates = jnp.clip(jnp.min(limits, axis=1), 0.0, None)
         rates = jnp.where(infeasible, 0.0, rates)
         thpt = rates * (unit_ir.sum(axis=1) if per_row else unit_ir.sum())
         return rates, thpt
 
-    return kernel
+    if not with_resources:
+
+        @jax.jit
+        def kernel(task_machine, comp, unit_ir, e_cm, met_cm, capacity):
+            _, var_w, met_w = _accumulate(
+                task_machine, comp, unit_ir, e_cm, met_cm, capacity
+            )
+            return _finish(var_w, met_w, capacity, unit_ir)
+
+        return kernel
+
+    @jax.jit
+    def kernel_resources(
+        task_machine, comp, unit_ir, e_cm, met_cm, capacity,
+        net_var, mem, mem_capacity,
+    ):
+        onehot, var_w, met_w = _accumulate(
+            task_machine, comp, unit_ir, e_cm, met_cm, capacity
+        )
+        var_w = var_w + net_var
+        mem_bt = mem if mem.ndim == 2 else mem[None, :]
+        mem_w = jnp.sum(jnp.where(onehot, mem_bt[:, None, :], 0.0), axis=-1)
+        mem_cap_b = (
+            mem_capacity if mem_capacity.ndim == 2 else mem_capacity[None, :]
+        )
+        over_mem = jnp.any(mem_w > mem_cap_b, axis=1)
+        return _finish(var_w, met_w, capacity, unit_ir, infeasible_extra=over_mem)
+
+    return kernel_resources
 
 
 @functools.cache
@@ -285,6 +324,9 @@ def closed_form_rates_jax(
     e_cm: np.ndarray,
     met_cm: np.ndarray,
     capacity: np.ndarray,
+    net_var: np.ndarray | None = None,
+    mem: np.ndarray | None = None,
+    mem_capacity: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """JAX twin of ``cost_model.closed_form_rates`` (scatter-free).
 
@@ -295,11 +337,21 @@ def closed_form_rates_jax(
     segmented-reduce kernel instead of the XLA contraction — except for
     per-row capacity, which the Pallas kernel does not carry yet; those
     batches stay on the XLA contraction on every backend.
+
+    Resource-vector extras (``net_var`` / ``mem`` / ``mem_capacity``) have
+    the ``cost_model.closed_form_rates`` semantics: the cut-traffic column
+    is added to the variable coefficient and memory is a hard feasibility
+    mask. All-``None`` (the scalar-CPU default) runs the exact legacy
+    kernels; absent resource types are filled with zeros / +inf for the
+    resource variant.
     """
     import os
 
     from jax.experimental import enable_x64
 
+    has_resources = (
+        net_var is not None or mem is not None or mem_capacity is not None
+    )
     if _use_pallas_scoring() and capacity.ndim == 1:
         from repro.kernels.sched_scoring.ops import closed_form_rates_sched
 
@@ -307,10 +359,25 @@ def closed_form_rates_jax(
         return closed_form_rates_sched(
             task_machine, comp, unit_ir, e_cm, met_cm, capacity,
             impl="interpret" if interpret else "pallas",
+            net_var=net_var, mem=mem, mem_capacity=mem_capacity,
         )
+    if not has_resources:
+        with enable_x64():
+            rates, thpt = _msr_kernel(per_row=comp.ndim == 2)(
+                task_machine, comp, unit_ir, e_cm, met_cm, capacity
+            )
+        return np.asarray(rates), np.asarray(thpt)
+    B = task_machine.shape[0]
+    m = capacity.shape[-1]
+    if net_var is None:
+        net_var = np.zeros((B, m), dtype=np.float64)
+    if mem is None:
+        mem = np.zeros(comp.shape[-1], dtype=np.float64)
+        mem_capacity = np.full(m, np.inf, dtype=np.float64)
     with enable_x64():
-        rates, thpt = _msr_kernel(per_row=comp.ndim == 2)(
-            task_machine, comp, unit_ir, e_cm, met_cm, capacity
+        rates, thpt = _msr_kernel(per_row=comp.ndim == 2, with_resources=True)(
+            task_machine, comp, unit_ir, e_cm, met_cm, capacity,
+            net_var, mem, mem_capacity,
         )
     return np.asarray(rates), np.asarray(thpt)
 
@@ -356,6 +423,16 @@ def max_stable_rate_batch_jax(
     ttypes = utg.component_types
     e_cm = cluster.profile.e[ttypes][:, cluster.machine_types]
     met_cm = cluster.profile.met[ttypes][:, cluster.machine_types]
+    net_var = mem = mem_cap = None
+    if cluster.has_resources:
+        cir_unit = skew.cir_unit if skew is not None else (
+            cost_model.component_rates(utg, 1.0)
+        )
+        net_var, mem, mem_cap = cost_model.resource_operands(
+            cluster, task_machine, comp, unit_ir, utg.alpha,
+            cir_unit, utg.edges, ttypes,
+        )
     return closed_form_rates_jax(
-        task_machine, comp, unit_ir, e_cm, met_cm, cluster.capacity
+        task_machine, comp, unit_ir, e_cm, met_cm, cluster.capacity,
+        net_var=net_var, mem=mem, mem_capacity=mem_cap,
     )

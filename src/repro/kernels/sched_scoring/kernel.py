@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["sched_scoring_pallas"]
+__all__ = ["sched_scoring_pallas", "sched_scoring_pallas_resources"]
 
 
 def _kernel(
@@ -65,6 +65,58 @@ def _kernel(
         met_w = met_w_ref[...]
         head = cap_ref[0][None, :] - met_w
         infeasible = jnp.any(head < 0.0, axis=1)
+        limits = jnp.where(
+            var_w > 0.0, head / jnp.maximum(var_w, 1e-300), jnp.inf
+        )
+        rates = jnp.clip(jnp.min(limits, axis=1), 0.0, None)
+        o_ref[...] = jnp.where(infeasible, 0.0, rates)[:, None].astype(o_ref.dtype)
+
+
+def _kernel_resources(
+    tm_ref,                      # (block_b, block_t) int32 task -> machine
+    ev_ref,                      # (block_b, block_t) e * unit_ir
+    met_ref,                     # (block_b, block_t) base load
+    mem_ref,                     # (block_b, block_t) per-task memory demand
+    cap_ref,                     # (1, m) capacities
+    net_ref,                     # (block_b, m) cut-traffic variable load
+    memcap_ref,                  # (1, m) memory capacities
+    o_ref,                       # (block_b, 1) rates out
+    var_ref, met_w_ref, mem_w_ref,   # VMEM (block_b, m) accumulators
+    *,
+    n_t_blocks: int,
+):
+    """Resource-vector variant of ``_kernel``: one more segmented reduce
+    (the memory column) plus the cut-traffic term folded into the variable
+    coefficient at finalize. Same grid/blocking; the scalar-CPU kernel is
+    untouched so default scoring never pays for the extra operands."""
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def init():
+        var_ref[...] = jnp.zeros_like(var_ref)
+        met_w_ref[...] = jnp.zeros_like(met_w_ref)
+        mem_w_ref[...] = jnp.zeros_like(mem_w_ref)
+
+    tm = tm_ref[...]
+    ev = ev_ref[...]
+    met = met_ref[...]
+    mem = mem_ref[...]
+    bb, bt = tm.shape
+    m = var_ref.shape[1]
+    wid = jax.lax.broadcasted_iota(jnp.int32, (bb, m, bt), 1)
+    onehot = tm[:, None, :] == wid
+    var_ref[...] += jnp.sum(jnp.where(onehot, ev[:, None, :], 0.0), axis=-1)
+    met_w_ref[...] += jnp.sum(jnp.where(onehot, met[:, None, :], 0.0), axis=-1)
+    mem_w_ref[...] += jnp.sum(jnp.where(onehot, mem[:, None, :], 0.0), axis=-1)
+
+    @pl.when(ti == n_t_blocks - 1)
+    def finalize():
+        var_w = var_ref[...] + net_ref[...]
+        met_w = met_w_ref[...]
+        head = cap_ref[0][None, :] - met_w
+        infeasible = jnp.any(head < 0.0, axis=1) | jnp.any(
+            mem_w_ref[...] > memcap_ref[0][None, :], axis=1
+        )
         limits = jnp.where(
             var_w > 0.0, head / jnp.maximum(var_w, 1e-300), jnp.inf
         )
@@ -119,4 +171,73 @@ def sched_scoring_pallas(
         ],
         interpret=interpret,
     )(tm, ev, met, capacity.reshape(1, m))
+    return out[:B, 0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_t", "interpret")
+)
+def sched_scoring_pallas_resources(
+    task_machine: jax.Array,     # (B, T) int
+    ev: jax.Array,               # (B, T) e * unit_ir, float
+    met: jax.Array,              # (B, T) float
+    mem: jax.Array,              # (B, T) per-task memory demand, float
+    capacity: jax.Array,         # (m,) float
+    net_var: jax.Array,          # (B, m) cut-traffic variable load, float
+    mem_capacity: jax.Array,     # (m,) float
+    *,
+    block_b: int = 256,
+    block_t: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Resource-vector twin of ``sched_scoring_pallas``.
+
+    Adds the memory feasibility mask (a third segmented reduce over the
+    pre-broadcast (B, T) memory column) and the network penalty column
+    (``net_var`` enters the variable coefficient at finalize, indexed by
+    the batch block only — absent resource types are zeros / +inf).
+    (B,) max stable rates; B == 0 must be handled by the caller.
+    """
+    B, T = task_machine.shape
+    m = capacity.shape[0]
+    bb = min(block_b, B)
+    bt = min(block_t, T)
+    n_b = -(-B // bb)
+    n_t = -(-T // bt)
+    pad_b = n_b * bb - B
+    pad_t = n_t * bt - T
+    tm = task_machine.astype(jnp.int32)
+    if pad_b or pad_t:
+        # Pad tasks with machine id m (matches no one-hot lane); padded
+        # rows reduce to var_w == mem_w == 0 and are sliced away below.
+        tm = jnp.pad(tm, ((0, pad_b), (0, pad_t)), constant_values=m)
+        ev = jnp.pad(ev, ((0, pad_b), (0, pad_t)))
+        met = jnp.pad(met, ((0, pad_b), (0, pad_t)))
+        mem = jnp.pad(mem, ((0, pad_b), (0, pad_t)))
+        net_var = jnp.pad(net_var, ((0, pad_b), (0, 0)))
+    kernel = functools.partial(_kernel_resources, n_t_blocks=n_t)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_b, n_t),
+        in_specs=[
+            pl.BlockSpec((bb, bt), lambda bi, ti: (bi, ti)),
+            pl.BlockSpec((bb, bt), lambda bi, ti: (bi, ti)),
+            pl.BlockSpec((bb, bt), lambda bi, ti: (bi, ti)),
+            pl.BlockSpec((bb, bt), lambda bi, ti: (bi, ti)),
+            pl.BlockSpec((1, m), lambda bi, ti: (0, 0)),
+            pl.BlockSpec((bb, m), lambda bi, ti: (bi, 0)),
+            pl.BlockSpec((1, m), lambda bi, ti: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, 1), lambda bi, ti: (bi, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_b * bb, 1), ev.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bb, m), ev.dtype),
+            pltpu.VMEM((bb, m), ev.dtype),
+            pltpu.VMEM((bb, m), ev.dtype),
+        ],
+        interpret=interpret,
+    )(
+        tm, ev, met, mem,
+        capacity.reshape(1, m), net_var, mem_capacity.reshape(1, m),
+    )
     return out[:B, 0]

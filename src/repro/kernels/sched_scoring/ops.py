@@ -26,6 +26,9 @@ def closed_form_rates_sched(
     met_cm: np.ndarray,
     capacity: np.ndarray,
     impl: str = "auto",
+    net_var: np.ndarray | None = None,
+    mem: np.ndarray | None = None,
+    mem_capacity: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """(rates, throughputs) over B candidate rows.
 
@@ -36,6 +39,12 @@ def closed_form_rates_sched(
       impl: ``"pallas"`` (compiled), ``"interpret"`` (Pallas interpreter —
         CPU-testable), ``"ref"`` (NumPy oracle), or ``"auto"`` (pallas on
         TPU, ref elsewhere).
+      net_var / mem / mem_capacity: resource-vector extras with the
+        ``cost_model.closed_form_rates`` semantics — (B, m) cut-traffic
+        variable load, (T,)/(B, T) per-task memory demand, (m,) memory
+        capacity. All ``None`` (the default) runs the scalar-CPU kernel
+        unchanged; any present extra routes to the resource variant with
+        zeros / +inf filling the absent type.
     """
     task_machine = np.asarray(task_machine, dtype=np.int64)
     per_row = comp.ndim == 2
@@ -43,9 +52,12 @@ def closed_form_rates_sched(
     e = e_cm[cmap, task_machine]                       # (B, T)
     met = met_cm[cmap, task_machine]
     ev = e * (unit_ir if per_row else unit_ir[None, :])
-    B = task_machine.shape[0]
+    B, T = task_machine.shape
     if B == 0:
         return np.zeros(0), np.zeros(0)
+    has_resources = (
+        net_var is not None or mem is not None or mem_capacity is not None
+    )
     if impl == "auto":
         import jax
 
@@ -53,17 +65,55 @@ def closed_form_rates_sched(
     if impl in ("pallas", "interpret"):
         from jax.experimental import enable_x64
 
-        from repro.kernels.sched_scoring.kernel import sched_scoring_pallas
+        from repro.kernels.sched_scoring.kernel import (
+            sched_scoring_pallas,
+            sched_scoring_pallas_resources,
+        )
 
         with enable_x64():
-            rates = np.asarray(
-                sched_scoring_pallas(
-                    task_machine, ev, met, capacity,
-                    interpret=impl == "interpret",
+            if has_resources:
+                m = capacity.shape[0]
+                net_b = (
+                    net_var
+                    if net_var is not None
+                    else np.zeros((B, m), dtype=np.float64)
                 )
-            )
+                mem_bt = (
+                    np.broadcast_to(
+                        mem if mem.ndim == 2 else mem[None, :], (B, T)
+                    ).astype(np.float64, copy=False)
+                    if mem is not None
+                    else np.zeros((B, T), dtype=np.float64)
+                )
+                mem_cap = (
+                    mem_capacity
+                    if mem_capacity is not None
+                    else np.full(m, np.inf, dtype=np.float64)
+                )
+                rates = np.asarray(
+                    sched_scoring_pallas_resources(
+                        task_machine, ev, met, mem_bt, capacity,
+                        net_b, mem_cap,
+                        interpret=impl == "interpret",
+                    )
+                )
+            else:
+                rates = np.asarray(
+                    sched_scoring_pallas(
+                        task_machine, ev, met, capacity,
+                        interpret=impl == "interpret",
+                    )
+                )
     elif impl == "ref":
-        rates = sched_scoring_ref(task_machine, ev, met, capacity)
+        mem_bt = None
+        if mem is not None:
+            mem_bt = np.broadcast_to(
+                mem if mem.ndim == 2 else mem[None, :], (B, T)
+            )
+        rates = sched_scoring_ref(
+            task_machine, ev, met, capacity,
+            net_var=net_var, mem=mem_bt, mem_capacity=mem_capacity,
+        )
     else:
         raise ValueError(f"unknown impl {impl!r}")
     thpt = rates * (unit_ir.sum(axis=1) if per_row else unit_ir.sum())

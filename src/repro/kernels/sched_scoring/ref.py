@@ -18,8 +18,17 @@ def sched_scoring_ref(
     ev: np.ndarray,              # (B, T) e * unit_ir
     met: np.ndarray,             # (B, T)
     capacity: np.ndarray,        # (m,)
+    net_var: np.ndarray | None = None,   # (B, m) cut-traffic load
+    mem: np.ndarray | None = None,       # (B, T) per-task memory demand
+    mem_capacity: np.ndarray | None = None,  # (m,)
 ) -> np.ndarray:
-    """(B,) max stable rates via sequential ``np.add.at`` accumulation."""
+    """(B,) max stable rates via sequential ``np.add.at`` accumulation.
+
+    Resource-vector extras follow ``cost_model.closed_form_rates``: the
+    cut-traffic column adds to the variable coefficient; memory is a hard
+    feasibility mask. All-``None`` is the scalar-CPU path, byte-identical
+    to before.
+    """
     task_machine = np.asarray(task_machine, dtype=np.int64)
     B, T = task_machine.shape
     m = capacity.shape[0]
@@ -29,8 +38,16 @@ def sched_scoring_ref(
     met_w = np.zeros((B, m), dtype=np.float64)
     np.add.at(var_w, (rows, cols), np.asarray(ev, dtype=np.float64).reshape(-1))
     np.add.at(met_w, (rows, cols), np.asarray(met, dtype=np.float64).reshape(-1))
+    if net_var is not None:
+        var_w = var_w + net_var
     head = capacity[None, :] - met_w
     infeasible = np.any(head < 0.0, axis=1)
+    if mem is not None:
+        mem_w = np.zeros((B, m), dtype=np.float64)
+        np.add.at(
+            mem_w, (rows, cols), np.asarray(mem, dtype=np.float64).reshape(-1)
+        )
+        infeasible |= np.any(mem_w > mem_capacity[None, :], axis=1)
     with np.errstate(divide="ignore", over="ignore"):
         limits = np.where(var_w > 0.0, head / np.maximum(var_w, 1e-300), np.inf)
     rates = np.min(limits, axis=1) if m else np.full(B, np.inf)

@@ -95,10 +95,20 @@ class TenantBatchScorer:
 
         # Concatenated incumbent row, per-task active maps, and the met
         # fold: each task's committed load on its incumbent machine.
+        self._has_network = mt.cluster.has_network
+        self._has_memory = mt.cluster.has_memory
         base_row = np.concatenate([states[t].task_machine() for t in order])
         active_comp = np.empty(t_all, dtype=np.int64)
         active_unit = np.empty(t_all, dtype=np.float64)
         task_load = np.empty(t_all, dtype=np.float64)
+        # Local (tenant-topology) task maps for score-time network pricing,
+        # and the per-task memory column: memory demand is rate-independent,
+        # so it needs no fold — pad columns carry 0 and contribute nothing.
+        self._local_comp: dict[int, np.ndarray] = {}
+        self._active_mem = (
+            np.empty(t_all, dtype=np.float64) if self._has_memory else None
+        )
+        net_own = np.zeros((len(states), m), dtype=np.float64)
         for t in order:
             st = states[t]
             lo, hi = self._task_span[t]
@@ -109,6 +119,14 @@ class TenantBatchScorer:
                 unit_t = (st.cir_unit / st.n_instances)[comp_t]
             active_comp[lo:hi] = self._comp_span[t][0] + comp_t
             active_unit[lo:hi] = unit_t
+            self._local_comp[t] = comp_t
+            if self._has_memory:
+                self._active_mem[lo:hi] = st.mem_c[comp_t]
+            if self._has_network:
+                # Tenant t's committed cut-traffic CPU load at its rate —
+                # part of the met fold (also linear in R_t, machine-indexed
+                # rather than task-indexed, so it adds after the bincount).
+                net_own[t] = float(mt.rates[t]) * st.net_load
             rate_t = float(mt.rates[t])
             w = base_row[lo:hi]
             task_load[lo:hi] = (
@@ -118,16 +136,34 @@ class TenantBatchScorer:
         self.base_row = base_row
         self.active_comp = active_comp
         self.active_unit = active_unit
-        # Fleet frozen load F (canonical-order bincount), then per-tenant
-        # residual capacity: cluster capacity minus everyone *else*.
+        # Fleet frozen load F (canonical-order bincount, plus each tenant's
+        # committed network load), then per-tenant residual capacity:
+        # cluster capacity minus everyone *else*.
         frozen = np.bincount(base_row, weights=task_load, minlength=m)
+        if self._has_network:
+            for t in order:
+                frozen = frozen + net_own[t]
         self._resid_cap = np.empty((len(states), m), dtype=np.float64)
         for t in order:
             lo, hi = self._task_span[t]
             own = np.bincount(
                 base_row[lo:hi], weights=task_load[lo:hi], minlength=m
             )
+            if self._has_network:
+                own = own + net_own[t]
             self._resid_cap[t] = mt.cluster.capacity - (frozen - own)
+        # Residual memory capacity per tenant: neighbours' rate-independent
+        # working sets come straight off each machine's memory budget.
+        self._resid_mem: np.ndarray | None = None
+        if self._has_memory:
+            frozen_mem = np.zeros(m, dtype=np.float64)
+            for t in order:
+                frozen_mem = frozen_mem + states[t].mem_load
+            self._resid_mem = np.empty((len(states), m), dtype=np.float64)
+            for t in order:
+                self._resid_mem[t] = mt.cluster.mem_capacity - (
+                    frozen_mem - states[t].mem_load
+                )
 
     # ----------------------------------------------------------- scoring
 
@@ -160,11 +196,31 @@ class TenantBatchScorer:
             empty = np.zeros(0, dtype=np.float64)
             return [(empty.copy(), empty.copy()) for _ in sweeps]
 
-        m = self.mt.cluster.n_machines
+        cluster = self.mt.cluster
+        m = cluster.n_machines
         tm = np.zeros((b_total, self.t_max), dtype=np.int64)
         comp = np.full((b_total, self.t_max), self.pad_comp, dtype=np.int64)
         unit = np.zeros((b_total, self.t_max), dtype=np.float64)
         cap = np.empty((b_total, m), dtype=np.float64)
+        # Resource-vector columns: each tenant's candidate rows price their
+        # *own* topology's cut traffic (cross-tenant traffic does not exist
+        # — tenants are separate topologies) against the shared distance
+        # matrix, and their memory against the tenant's residual memory.
+        net = (
+            np.empty((b_total, m), dtype=np.float64)
+            if self._has_network
+            else None
+        )
+        mem = (
+            np.zeros((b_total, self.t_max), dtype=np.float64)
+            if self._has_memory
+            else None
+        )
+        memcap = (
+            np.empty((b_total, m), dtype=np.float64)
+            if self._has_memory
+            else None
+        )
         row0 = 0
         for (t, rows), b_t in zip(sweeps, sizes):
             if b_t == 0:
@@ -172,13 +228,31 @@ class TenantBatchScorer:
             lo, hi = self._task_span[t]
             w = hi - lo
             sl = slice(row0, row0 + b_t)
-            tm[sl, :w] = np.asarray(rows, dtype=np.int64)
+            rows_arr = np.asarray(rows, dtype=np.int64)
+            tm[sl, :w] = rows_arr
             comp[sl, :w] = self.active_comp[lo:hi]
             unit[sl, :w] = self.active_unit[lo:hi]
             cap[sl] = self._resid_cap[t]
+            if self._has_network:
+                st = self.mt.states[t]
+                net[sl] = cost_model.network_unit_load(
+                    rows_arr,
+                    self._local_comp[t],
+                    self.active_unit[lo:hi],
+                    st.utg.alpha,
+                    st.cir_unit,
+                    st.utg.edges,
+                    cluster.distance,
+                    cluster.net_penalty,
+                )
+            if self._has_memory:
+                mem[sl, :w] = self._active_mem[lo:hi]
+                memcap[sl] = self._resid_mem[t]
             row0 += b_t
 
-        rates, thpt = self._dispatch(tm, comp, unit, cap)
+        rates, thpt = self._dispatch(
+            tm, comp, unit, cap, net_var=net, mem=mem, mem_capacity=memcap
+        )
         self.candidates_evaluated += b_total
         out: list[tuple[np.ndarray, np.ndarray]] = []
         row0 = 0
@@ -203,6 +277,9 @@ class TenantBatchScorer:
         comp: np.ndarray,
         unit: np.ndarray,
         capacity: np.ndarray,
+        net_var: np.ndarray | None = None,
+        mem: np.ndarray | None = None,
+        mem_capacity: np.ndarray | None = None,
     ) -> tuple[np.ndarray, np.ndarray]:
         from repro.core.simulator import resolve_closed_form_backend
 
@@ -217,11 +294,15 @@ class TenantBatchScorer:
             from repro.core.sim_jax import closed_form_rates_jax
 
             return closed_form_rates_jax(
-                tm, comp, unit, self.e_table, self.met_table, capacity
+                tm, comp, unit, self.e_table, self.met_table, capacity,
+                net_var=net_var, mem=mem, mem_capacity=mem_capacity,
             )
         e = self.e_table[comp, tm]
         met = self.met_table[comp, tm]
-        return cost_model.closed_form_rates(tm, e, met, unit, capacity)
+        return cost_model.closed_form_rates(
+            tm, e, met, unit, capacity,
+            net_var=net_var, mem=mem, mem_capacity=mem_capacity,
+        )
 
     # ------------------------------------------------- reference (tests)
 

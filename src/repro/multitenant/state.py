@@ -67,12 +67,20 @@ class MultiTenantState:
         """
         states: list[ScheduleState | None] = [None] * len(tenant_set)
         residual = cluster.capacity.astype(np.float64).copy()
+        mem_resid = (
+            cluster.mem_capacity.astype(np.float64).copy()
+            if cluster.has_memory
+            else None
+        )
         for i in cls._canonical(tenant_set):
             tenant = tenant_set[i]
-            etg = first_assignment(tenant.utg, cluster.with_capacity(residual), r0)
+            view = cluster.with_capacity(residual, mem_capacity=mem_resid)
+            etg = first_assignment(tenant.utg, view, r0)
             st = ScheduleState.from_etg(etg, cluster, skew=tenant.skew)
             states[i] = st
             residual = residual - st.met_load
+            if mem_resid is not None:
+                mem_resid = mem_resid - st.mem_load
         return cls(tenant_set, cluster, [st for st in states if st is not None])
 
     @staticmethod
@@ -82,9 +90,17 @@ class MultiTenantState:
     # ------------------------------------------------------- load algebra
 
     def load_of(self, t: int) -> np.ndarray:
-        """(m,) exact machine load of tenant ``t`` at its current rate."""
+        """(m,) exact machine load of tenant ``t`` at its current rate.
+
+        On network-modelled clusters the tenant's cut-traffic load (also
+        linear in its rate) is part of the variable coefficient, so
+        cross-tenant interference prices network CPU exactly too.
+        """
         st = self.states[t]
-        return st.met_load + float(self.rates[t]) * st.var_load
+        var = st.var_load
+        if self.cluster.has_network:
+            var = var + st.net_load
+        return st.met_load + float(self.rates[t]) * var
 
     def total_load(self) -> np.ndarray:
         """(m,) summed machine load of all tenants.
@@ -103,15 +119,35 @@ class MultiTenantState:
         """(m,) capacity left for tenant ``t`` by everyone else's load."""
         return self.cluster.capacity - (self.total_load() - self.load_of(t))
 
+    def total_mem_load(self) -> np.ndarray:
+        """(m,) summed memory load of all tenants (canonical order; memory
+        demands are rate-independent, so no rate fold is needed)."""
+        total = np.zeros(self.cluster.n_machines, dtype=np.float64)
+        for t in self._canonical(self.tenant_set):
+            total += self.states[t].mem_load
+        return total
+
+    def residual_mem_capacity(self, t: int) -> np.ndarray:
+        """(m,) memory capacity left for tenant ``t`` by everyone else."""
+        return self.cluster.mem_capacity - (
+            self.total_mem_load() - self.states[t].mem_load
+        )
+
     def residual_cluster(self, t: int) -> Cluster:
         """Cluster view whose capacity is tenant ``t``'s residual head room.
 
         Feeding this to single-tenant ``refine``/``schedule`` makes their
         moves respect every other tenant's committed allocation by
         construction — a candidate that would evict a neighbour below its
-        share simply scores as infeasible.
+        share simply scores as infeasible. On memory-modelled clusters the
+        residual memory capacity is carried the same way (neighbours'
+        rate-independent working sets are subtracted); the distance matrix
+        and penalty pass through unchanged.
         """
-        return self.cluster.with_capacity(self.residual_capacity(t))
+        mem = self.residual_mem_capacity(t) if self.cluster.has_memory else None
+        return self.cluster.with_capacity(
+            self.residual_capacity(t), mem_capacity=mem
+        )
 
     def residual_rstar(self, t: int) -> float:
         """Closed-form max stable rate of tenant ``t`` on its residual.
@@ -122,8 +158,14 @@ class MultiTenantState:
         collapse the rate to 0.
         """
         st = self.states[t]
+        if self.cluster.has_memory and np.any(
+            st.mem_load > self.residual_mem_capacity(t)
+        ):
+            return 0.0
         head = self.residual_capacity(t) - st.met_load
         var = st.var_load
+        if self.cluster.has_network:
+            var = var + st.net_load
         if np.any((head < 0.0) & ((st.met_load > 0.0) | (var > 0.0))):
             return 0.0
         with np.errstate(divide="ignore"):
@@ -131,9 +173,22 @@ class MultiTenantState:
         return float(max(np.min(limits), 0.0))
 
     def feasible(self, slack: float = 1e-9) -> bool:
-        """Shared-load invariant: total load within capacity (+``slack``)."""
+        """Shared-load invariant: total load within capacity (+``slack``).
+
+        On memory-modelled clusters the fleet's summed working sets must
+        also fit each machine's memory (same relative slack — this is an
+        invariant check over float sums, not an admission rule).
+        """
         cap = self.cluster.capacity
-        return bool(np.all(self.total_load() <= cap + slack * np.maximum(cap, 1.0)))
+        if not np.all(self.total_load() <= cap + slack * np.maximum(cap, 1.0)):
+            return False
+        if self.cluster.has_memory:
+            mcap = self.cluster.mem_capacity
+            if not np.all(
+                self.total_mem_load() <= mcap + slack * np.maximum(mcap, 1.0)
+            ):
+                return False
+        return True
 
     def replace_state(self, t: int, state: ScheduleState) -> None:
         """Swap tenant ``t``'s placement (e.g. after a refine round)."""

@@ -514,11 +514,10 @@ class OracleRescheduler:
             return None
         # Algorithm 1 assumes every machine is usable, so schedule on
         # the alive subcluster and map machine indices back.
-        sub = Cluster(
-            machine_types=self.cluster.machine_types[alive],
-            capacity=obs.capacity[alive],
-            profile=self.cluster.profile,
-        )
+        # ``subcluster`` carries the resource-vector fields (memory
+        # capacities and the distance matrix restrict to the alive rows),
+        # so the oracle optimizes the same generalized objective.
+        sub = self.cluster.subcluster(alive, capacity=obs.capacity[alive])
         plan = self._cache.get(key)
         if plan is None:
             sub_plan = _schedule(

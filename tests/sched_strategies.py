@@ -17,6 +17,7 @@ from repro.core import (
     UserGraph,
     paper_cluster,
     paper_profile,
+    rack_distance_matrix,
 )
 
 PROFILE = paper_profile()
@@ -145,6 +146,59 @@ def random_profile(draw):
         type_names=("spout", "t1", "t2", "t3"),
         machine_type_names=("m0", "m1", "m2"),
     )
+
+
+@st.composite
+def resource_attachment(draw, cluster, with_memory=None, with_network=None):
+    """Attach random resource-vector fields to an existing cluster.
+
+    ``with_memory`` / ``with_network`` force (True/False) or draw (None)
+    each attachment. Memory capacities are drawn generous enough that every
+    single-instance placement fits on some machine (the brute-force suites
+    check the engines never *return* an over-memory placement — a universe
+    with no feasible placement at all would make that property vacuous).
+    Network attaches a rack-structured distance matrix with a mild penalty
+    so CPU remains the primary resource, as in the R-Storm scenarios.
+    """
+    profile = cluster.profile
+    mem_capacity = None
+    if with_memory if with_memory is not None else draw(st.booleans()):
+        mem = np.array(
+            [draw(st.floats(0.1, 4.0)) for _ in range(profile.n_task_types)]
+        )
+        profile = profile.with_mem(mem)
+        mem_capacity = np.array(
+            [
+                draw(st.floats(float(mem.max()), 4.0 * float(mem.sum())))
+                for _ in range(cluster.n_machines)
+            ]
+        )
+    distance = None
+    net_penalty = 1.0
+    if with_network if with_network is not None else draw(st.booleans()):
+        racks = np.array(
+            [draw(st.integers(0, 2)) for _ in range(cluster.n_machines)]
+        )
+        distance = rack_distance_matrix(
+            racks,
+            same_rack=draw(st.floats(0.5, 1.5)),
+            cross_rack=draw(st.floats(1.5, 4.0)),
+        )
+        net_penalty = draw(st.floats(0.0, 0.5))
+    return Cluster(
+        machine_types=cluster.machine_types,
+        capacity=cluster.capacity,
+        profile=profile,
+        mem_capacity=mem_capacity,
+        distance=distance,
+        net_penalty=net_penalty,
+    )
+
+
+@st.composite
+def random_resource_cluster(draw, max_per_type: int = 3, **kwargs):
+    """Paper-profile cluster with random resource-vector attachments."""
+    return draw(resource_attachment(draw(random_cluster(max_per_type)), **kwargs))
 
 
 @st.composite
